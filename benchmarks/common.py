@@ -1,0 +1,43 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Every benchmark returns rows ``(name, us_per_call, derived)`` where
+``us_per_call`` is the mean simulated/measured TTFT (µs) of the subject
+system and ``derived`` a figure-specific headline (speedup, crossover, ...).
+Simulation benches use the paper's hardware profiles; "real:" benches run
+reduced models on this host.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.config import HARDWARE, IO_BANDWIDTHS  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.serving import SimServingEngine, generate  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+os.makedirs(RESULTS, exist_ok=True)
+
+DEFAULTS = dict(hw="h100", bw="10Gbps", arch="qwen3-8b", stages=2,
+                max_batch=8, n_requests=32)
+
+
+def sim_ttft(system: str, *, workload="swe_bench", arch=None, hw=None, bw=None,
+             stages=None, max_batch=None, n_requests=None, seed=1,
+             requests=None, io_channels=1):
+    cfg = get_config(arch or DEFAULTS["arch"])
+    reqs = requests if requests is not None else \
+        generate(workload, n_requests or DEFAULTS["n_requests"], seed=seed)
+    eng = SimServingEngine(
+        cfg, HARDWARE[hw or DEFAULTS["hw"]],
+        io_bandwidth=IO_BANDWIDTHS[bw or DEFAULTS["bw"]],
+        system=system, stages=stages if stages is not None else DEFAULTS["stages"],
+        max_batch=max_batch if max_batch is not None else DEFAULTS["max_batch"],
+        io_channels=io_channels)
+    return eng.run(reqs)
+
+
+def row(name: str, seconds: float, derived: str) -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

@@ -1,0 +1,25 @@
+"""Paper Fig. 1c: recomputation is superlinear in length; I/O restoration is
+linear but bandwidth-bound — neither wins everywhere."""
+from benchmarks.common import row
+from repro.config import HARDWARE, IO_BANDWIDTHS
+from repro.configs import get_config
+from repro.core.cost_model import CostModel
+
+
+def run():
+    cfg = get_config("qwen3-8b")
+    rows = []
+    for bw_name in ("10Gbps", "80Gbps"):
+        cost = CostModel(cfg, HARDWARE["h100"], IO_BANDWIDTHS[bw_name], mfu=0.45)
+        for n in (500, 2000, 8000, 20000, 32000):
+            tc = cost.t_comp(n)
+            tio = cost.t_io_tokens(n)
+            rows.append(row(f"fig1c/recompute/n={n}", tc, f"bw={bw_name}"))
+            rows.append(row(f"fig1c/io/{bw_name}/n={n}", tio,
+                            f"io_beats_compute={tio < tc}"))
+    # headline: superlinearity factor of recompute 500 -> 32000 tokens
+    cost = CostModel(cfg, HARDWARE["h100"], IO_BANDWIDTHS["10Gbps"], mfu=0.45)
+    superlin = (cost.t_comp(32000) / cost.t_comp(500)) / (32000 / 500)
+    rows.append(row("fig1c/superlinearity", cost.t_comp(32000),
+                    f"superlinear_factor={superlin:.2f}x"))
+    return rows

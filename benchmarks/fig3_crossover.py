@@ -1,0 +1,43 @@
+"""Paper Fig. 3: token-wise vs layer-wise crossover L_Δ — analytic on the
+paper hardware + the v5e target, and MEASURED on a real reduced model."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from repro.config import HARDWARE, IO_BANDWIDTHS
+from repro.configs import get_config
+from repro.core.cost_model import CostModel
+from repro.core.executor import RestorationExecutor
+from repro.core.profiler import profile_analytic, profile_measured
+from repro.models import build_model
+
+
+def run():
+    rows = []
+    for hw in ("h100", "tpu_v5e"):
+        for bw in ("10Gbps", "40Gbps"):
+            cost = CostModel(get_config("qwen3-8b"), HARDWARE[hw],
+                             IO_BANDWIDTHS[bw], mfu=0.45)
+            prof = profile_analytic(cost)
+            rows.append(row(f"fig3/analytic/{hw}/{bw}",
+                            prof.t_token[-1], f"L_delta={prof.l_delta}"))
+    # measured on a real model (CPU): crossover exists and is content-agnostic
+    cfg = get_config("qwen3-8b").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    ex = RestorationExecutor(m, params, chunk_size=8)
+
+    def make_inputs(n, seed=0):
+        return jax.random.randint(jax.random.PRNGKey(seed), (1, n), 0,
+                                  cfg.vocab_size)
+
+    prof = profile_measured(ex, make_inputs, lengths=[16, 64, 160], repeats=1)
+    rows.append(row("fig3/measured/reduced-qwen3", prof.t_token[-1],
+                    f"L_delta={prof.l_delta}"))
+    # content-agnostic: different token content, same ordering of strategies
+    prof2 = profile_measured(ex, lambda n: make_inputs(n, seed=9),
+                             lengths=[16, 160], repeats=1)
+    agree = (prof.t_token[0] > prof.t_layer[0]) == (prof2.t_token[0] > prof2.t_layer[0])
+    rows.append(row("fig3/content-agnostic", prof2.t_token[-1],
+                    f"ordering_agrees={agree}"))
+    return rows

@@ -1,0 +1,14 @@
+"""Paper Fig. 5: resource utilization during restoration — vLLM is
+compute-bound with idle I/O, LMCache saturates I/O with idle compute,
+CacheFlow keeps both busy (paper: 88% GPU / 78% I/O)."""
+from benchmarks.common import row, sim_ttft
+
+
+def run():
+    rows = []
+    for system in ("vllm", "lmcache", "cacheflow"):
+        rep = sim_ttft(system, workload="swe_bench")
+        rows.append(row(f"fig5/{system}", rep.stats["mean"],
+                        f"compute_busy={rep.compute_busy:.0%} "
+                        f"io_busy={rep.io_busy:.0%}"))
+    return rows

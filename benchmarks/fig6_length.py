@@ -1,0 +1,20 @@
+"""Paper Fig. 6: TTFT by input length 6K→30K — vLLM grows superlinearly,
+CacheFlow's gap widens from ~1.1× to ~1.7×."""
+from benchmarks.common import row, sim_ttft
+from repro.serving.workloads import fixed_length
+
+
+def run():
+    rows = []
+    gaps = []
+    for n in (6000, 12000, 20000, 30000):
+        reqs_v = fixed_length(8, n, seed=0)
+        reqs_c = fixed_length(8, n, seed=0)
+        tv = sim_ttft("vllm", requests=reqs_v).stats["mean"]
+        tc = sim_ttft("cacheflow", requests=reqs_c).stats["mean"]
+        gaps.append(tv / tc)
+        rows.append(row(f"fig6/n={n}", tc, f"vllm={tv:.3f}s gap={tv / tc:.2f}x"))
+    rows.append(row("fig6/gap-widening", 0.0,
+                    f"gap@6k={gaps[0]:.2f}x gap@30k={gaps[-1]:.2f}x "
+                    f"widens={gaps[-1] > gaps[0]}"))
+    return rows

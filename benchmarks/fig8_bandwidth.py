@@ -1,0 +1,16 @@
+"""Paper Fig. 8: I/O bandwidth impact (10/40/80 Gbps on H100) — CacheFlow
+improves TTFT at every bandwidth (paper: 1.7×/1.5× at 40/80 Gbps)."""
+from benchmarks.common import row, sim_ttft
+
+
+def run():
+    rows = []
+    for bw in ("10Gbps", "40Gbps", "80Gbps"):
+        best = None
+        for base in ("vllm", "lmcache", "cake"):
+            r = sim_ttft(base, workload="swe_bench", bw=bw, hw="h100")
+            best = min(best, r.stats["mean"]) if best else r.stats["mean"]
+        rc = sim_ttft("cacheflow", workload="swe_bench", bw=bw, hw="h100")
+        rows.append(row(f"fig8/{bw}", rc.stats["mean"],
+                        f"speedup_vs_best={best / rc.stats['mean']:.2f}x"))
+    return rows

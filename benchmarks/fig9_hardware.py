@@ -1,0 +1,23 @@
+"""Paper Fig. 9: hardware ablation (2×L40S, A100 — paper: 1.6×/1.5×), plus
+the TPU v5e target this framework is built for."""
+from benchmarks.common import row, sim_ttft
+
+
+def run():
+    rows = []
+    for hw, stages in (("l40s", 2), ("a100", 1), ("h100", 1), ("tpu_v5e", 1)):
+        classic = None
+        for base in ("vllm", "lmcache", "sglang"):
+            r = sim_ttft(base, workload="swe_bench", hw=hw, stages=stages,
+                         arch="qwen3-30b-a3b", bw="10Gbps")
+            classic = min(classic, r.stats["mean"]) if classic else r.stats["mean"]
+        cake = sim_ttft("cake", workload="swe_bench", hw=hw, stages=stages,
+                        arch="qwen3-30b-a3b", bw="10Gbps").stats
+        rc = sim_ttft("cacheflow", workload="swe_bench", hw=hw, stages=stages,
+                      arch="qwen3-30b-a3b", bw="10Gbps")
+        rows.append(row(
+            f"fig9/{hw}", rc.stats["mean"],
+            f"speedup_vs_classic={classic / rc.stats['mean']:.2f}x "
+            f"(paper 1.5-1.6x) vs_cake={cake['mean'] / rc.stats['mean']:.2f}x "
+            f"tail_vs_cake={cake['p99'] / rc.stats['p99']:.2f}x"))
+    return rows

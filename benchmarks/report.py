@@ -1,0 +1,102 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run JSONs.  Run after (re-)sweeping:
+
+    PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.roofline import DRYRUN_DIR, analyze_cell, load_cells
+from repro.config import SHAPES
+from repro.configs import ASSIGNED_ARCHS
+
+
+def _fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(mesh: str) -> str:
+    lines = [
+        f"#### Mesh {mesh}",
+        "",
+        "| arch | shape | mode | args GB/dev | temp GB/dev | peak GB/dev | "
+        "GFLOP/dev | coll MB/dev (AG/AR/RS/A2A) | compile s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ASSIGNED_ARCHS:
+        for shape in SHAPES:
+            path = os.path.join(DRYRUN_DIR, f"{arch}__{shape}__{mesh}.json")
+            if not os.path.exists(path):
+                continue
+            with open(path) as f:
+                d = json.load(f)
+            if "skipped" in d:
+                lines.append(f"| {arch} | {shape} | — | — | — | — | — | "
+                             f"skip ({d['skipped']}) | — |")
+                continue
+            m = d["memory"]
+            cb = d["collectives"]["bytes"]
+            coll = (f"{cb['all-gather'] / 2**20:.0f}/{cb['all-reduce'] / 2**20:.0f}/"
+                    f"{cb['reduce-scatter'] / 2**20:.0f}/{cb['all-to-all'] / 2**20:.0f}")
+            lines.append(
+                f"| {arch} | {shape} | {d['mode']} | {_fmt_bytes(m['argument_bytes'])} "
+                f"| {_fmt_bytes(m['temp_bytes'])} | {_fmt_bytes(m['peak_estimate_bytes'])} "
+                f"| {d['flops_per_device'] / 1e9:.0f} | {coll} | {d['compile_s']:.1f} |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    cells = load_cells("16x16")
+    lines = [
+        "| arch | shape | comp s | mem s | coll s | dominant | useful | "
+        "roofline frac | peak GB | fits 16GB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if "skipped" in c:
+            lines.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                         f"skip({c['skipped']}) | — | — | — | — |")
+            continue
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['compute_s']:.2e} | "
+            f"{c['memory_s']:.2e} | {c['collective_s']:.2e} | **{c['dominant']}** | "
+            f"{c['useful_ratio']:.2f} | {c['roofline_fraction']:.1%} | "
+            f"{c['peak_gb_per_device']:.1f} | {'✓' if c['fits_16gb'] else '✗'} |")
+    return "\n".join(lines)
+
+
+def summarize() -> str:
+    cells = [c for c in load_cells("16x16") if "skipped" not in c]
+    if not cells:
+        return "(no cells analyzed yet)"
+    by_dom = {}
+    for c in cells:
+        by_dom.setdefault(c["dominant"], []).append(c)
+    out = [f"Cells analyzed: {len(cells)}. Dominant terms: " +
+           ", ".join(f"{k}: {len(v)}" for k, v in sorted(by_dom.items()))]
+    worst = sorted(cells, key=lambda c: c["roofline_fraction"])[:5]
+    out.append("Worst roofline fractions: " +
+               ", ".join(f"{c['arch']}×{c['shape']}={c['roofline_fraction']:.1%}"
+                         for c in worst))
+    coll = sorted(cells, key=lambda c: -c["collective_s"])[:3]
+    out.append("Most collective-bound: " +
+               ", ".join(f"{c['arch']}×{c['shape']}={c['collective_s']:.2e}s"
+                         for c in coll))
+    nofit = [c for c in cells if not c["fits_16gb"]]
+    out.append("Over 16 GB/device: " +
+               (", ".join(f"{c['arch']}×{c['shape']}({c['peak_gb_per_device']:.0f}GB)"
+                          for c in nofit) or "none"))
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print("## Dry-run\n")
+    print(dryrun_table("16x16"))
+    print()
+    print(dryrun_table("2x16x16"))
+    print("\n## Roofline (single-pod 16x16, v5e constants)\n")
+    print(roofline_table())
+    print("\n### Summary\n")
+    print(summarize())

@@ -1,0 +1,187 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch × shape × mesh), from the compiled per-device SPMD module:
+
+  compute term    = HLO_FLOPs_per_device / (peak_FLOP/s)
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / link_bw
+
+(cost_analysis is already per-device post-partitioning, so per-device values
+divided by per-chip rates ARE the "global / (chips × rate)" terms.)
+
+Also reports MODEL_FLOPS = 6·N·D (train) or 2·N_active·D (inference forward)
+vs HLO_FLOPs — the useful-compute ratio that exposes remat/dispatch waste —
+and whether the per-device memory estimate fits v5e's 16 GB HBM.
+"""
+from __future__ import annotations
+
+import csv
+import json
+import os
+from typing import Optional
+
+from repro.config import HARDWARE, SHAPES
+from repro.configs import ASSIGNED_ARCHS, get_config
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+HW = HARDWARE["tpu_v5e"]
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Useful math per step (global): train backward multiplier 3×."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    pc = cfg.param_counts()
+    n = pc["active"] - pc["embedding"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens + 3.0 * _attn_flops(cfg, shape.seq_len, tokens)
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens + _attn_flops(cfg, shape.seq_len, tokens)
+    # decode: one token per sequence, attention over the cache
+    tokens = shape.global_batch
+    ctx = shape.seq_len
+    return 2.0 * n * tokens + _attn_flops(cfg, ctx, tokens, decode=True)
+
+
+def _attn_flops(cfg, ctx, tokens, decode=False):
+    n_attn = len(cfg.attention_layers)
+    if n_attn == 0:
+        return 0.0
+    eff = min(ctx, cfg.attn_window) if cfg.attn_window else ctx
+    avg = eff if decode else eff / 2
+    return 2.0 * 2.0 * n_attn * cfg.num_heads * cfg.qk_head_dim * tokens * avg
+
+
+def min_memory_bytes(arch: str, shape_name: str, chips: int) -> float:
+    """Analytic per-device lower bound on HBM traffic for one step: weights
+    must be read once (twice + optimizer state for training), the KV cache
+    read (decode) or written (prefill), and activations touched once.
+    cost_analysis' byte counts share the while-body undercount, so the
+    memory roofline term uses max(HLO bytes, this floor)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    pc = cfg.param_counts()
+    if shape.kind == "train":
+        # fp32 master + m + v read/write + bf16 cast read ≈ 26 B/param
+        w = pc["total"] * 26.0
+        act = shape.global_batch * shape.seq_len * cfg.d_model * 2 * 4
+        return (w + act) / chips
+    w = pc["active" if shape.kind == "decode" else "total"] * 2.0
+    if shape.kind == "prefill":
+        cache = cfg.kv_bytes_per_token() * shape.global_batch * shape.seq_len
+        act = shape.global_batch * shape.seq_len * cfg.d_model * 2 * 2
+        return (pc["total"] * 2.0 + cache + act) / chips
+    # decode: read whole cache + all (active) weights
+    eff = min(shape.seq_len, cfg.attn_window) if cfg.attn_window else shape.seq_len
+    cache = cfg.kv_bytes_per_token() * shape.global_batch * eff
+    cache += cfg.state_bytes(shape.global_batch)
+    return (w + cache) / chips
+
+
+def analyze_cell(data: dict) -> Optional[dict]:
+    if "skipped" in data:
+        return None
+    chips = 512 if data["mesh"] == "2x16x16" else 256
+    corr = data.get("corrected", {})
+    flops_dev = corr.get("dot_flops_per_device") or data["flops_per_device"]
+    coll_dev = corr.get("collective_total_bytes",
+                        data["collectives"]["total_bytes"])
+    mem_floor = min_memory_bytes(data["arch"], data["shape"], chips)
+    mem_dev = max(data["bytes_per_device"], mem_floor)
+    t_comp = flops_dev / HW.peak_flops
+    t_mem = mem_dev / HW.hbm_bw
+    t_coll = coll_dev / HW.link_bw
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(data["arch"], data["shape"])
+    hlo_global = flops_dev * chips
+    useful = mf / hlo_global if hlo_global > 0 else float("nan")
+    peak_gb = data["memory"]["peak_estimate_bytes"] / 2**30
+    # roofline fraction: the step's own ideal (useful flops / memory floor)
+    # over its actual dominant term
+    ideal = max(mf / chips / HW.peak_flops, mem_floor / HW.hbm_bw)
+    step_time = max(terms.values())
+    frac = ideal / step_time if step_time > 0 else 0.0
+    return {
+        "arch": data["arch"], "shape": data["shape"], "mesh": data["mesh"],
+        "mode": data.get("mode", "?"),
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf, "hlo_flops_global": hlo_global,
+        "useful_ratio": useful,
+        "roofline_fraction": min(frac, 1.0),
+        "peak_gb_per_device": peak_gb,
+        "fits_16gb": peak_gb <= 16.0,
+    }
+
+
+def load_cells(mesh: str = "16x16"):
+    out = []
+    if not os.path.isdir(DRYRUN_DIR):
+        return out
+    for fn in sorted(os.listdir(DRYRUN_DIR)):
+        if not fn.endswith(f"__{mesh}.json"):
+            continue
+        with open(os.path.join(DRYRUN_DIR, fn)) as f:
+            data = json.load(f)
+        cell = analyze_cell(data)
+        if cell:
+            out.append(cell)
+        else:
+            out.append({"arch": data["arch"], "shape": data["shape"],
+                        "mesh": data.get("mesh", mesh), "skipped": data["skipped"]})
+    return out
+
+
+def write_csv(cells, path):
+    keys = ["arch", "shape", "mesh", "mode", "compute_s", "memory_s",
+            "collective_s", "dominant", "useful_ratio", "roofline_fraction",
+            "peak_gb_per_device", "fits_16gb"]
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys, extrasaction="ignore")
+        w.writeheader()
+        for c in cells:
+            if "skipped" not in c:
+                w.writerow(c)
+
+
+def run():
+    """Benchmark-harness entry: emits one row per dry-run cell."""
+    from benchmarks.common import row
+    cells = load_cells("16x16")
+    rows = []
+    done = {(c["arch"], c["shape"]) for c in cells if "skipped" not in c}
+    for c in cells:
+        if "skipped" in c:
+            rows.append(row(f"roofline/{c['arch']}/{c['shape']}", 0.0,
+                            f"skipped:{c['skipped']}"))
+            continue
+        step = max(c["compute_s"], c["memory_s"], c["collective_s"])
+        rows.append(row(
+            f"roofline/{c['arch']}/{c['shape']}", step,
+            f"dom={c['dominant']} comp={c['compute_s']:.2e}s "
+            f"mem={c['memory_s']:.2e}s coll={c['collective_s']:.2e}s "
+            f"useful={c['useful_ratio']:.2f} mfu={c['roofline_fraction']:.2%} "
+            f"fits16GB={c['fits_16gb']}"))
+    if done:
+        write_csv(cells, os.path.join(os.path.dirname(__file__), "results",
+                                      "roofline.csv"))
+        rows.append(row("roofline/cells-analyzed", 0.0,
+                        f"count={len(done)} (expected {_expected_cells()})"))
+    return rows
+
+
+def _expected_cells() -> int:
+    n = 0
+    from repro.config import supports_shape
+    for a in ASSIGNED_ARCHS:
+        for s in SHAPES.values():
+            n += supports_shape(get_config(a), s)
+    return n
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (skeleton contract)."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+MODULES = [
+    "benchmarks.fig1c_restore_latency",
+    "benchmarks.fig3_crossover",
+    "benchmarks.fig4_ttft_cdf",
+    "benchmarks.fig5_utilization",
+    "benchmarks.fig6_length",
+    "benchmarks.fig7_ablation_3d",
+    "benchmarks.fig8_bandwidth",
+    "benchmarks.fig9_hardware",
+    "benchmarks.fig10_batch",
+    "benchmarks.roofline",
+]
+
+
+def main() -> None:
+    import importlib
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(mod_name)
+            for line in mod.run():
+                print(line)
+            print(f"{mod_name.split('.')[-1]}/bench_wall,"
+                  f"{(time.time() - t0) * 1e6:.0f},ok")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{mod_name},0,FAILED")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

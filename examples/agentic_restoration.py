@@ -1,0 +1,56 @@
+"""Agentic pipeline (SWE-Bench-like): many tool calls share one long repo
+context.  Shows (1) batch-aware scheduling under contention, (2) the KV-store
+tier impact, (3) stage-parallel (3D) restoration ablation.
+
+    PYTHONPATH=src python examples/agentic_restoration.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.config import HARDWARE, IO_BANDWIDTHS  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.serving import SimServingEngine, TieredKVStore, generate  # noqa: E402
+
+
+def main():
+    cfg = get_config("qwen3-30b-a3b")      # the paper's MoE model
+    hw = HARDWARE["tpu_v5e"]
+
+    print("SWE-Bench-like agentic workload, 64 requests, v5e target\n")
+
+    # 1. batch-aware I/O vs request-centric (cake) under heavy contention
+    print("batch awareness (10 Gbps, 1 shared channel):")
+    for system in ("cake", "cacheflow"):
+        reqs = generate("swe_bench", 64, seed=11, arrival_rate=8.0)
+        eng = SimServingEngine(cfg, hw, io_bandwidth=IO_BANDWIDTHS["10Gbps"],
+                               system=system, stages=2, max_batch=16)
+        s = eng.run(reqs).stats
+        print(f"  {system:10s} mean={s['mean']:.3f}s p99={s['p99']:.3f}s")
+
+    # 2. KV-store tiers: hot contexts in host DRAM vs cold in remote
+    print("\nKV-store tiers (hot contexts promoted to host DRAM):")
+    for host_cap in (0.0, 200e9):
+        store = TieredKVStore(host_cap=host_cap, host_bw=100e9,
+                              remote_bw=IO_BANDWIDTHS["10Gbps"])
+        reqs = generate("swe_bench", 64, seed=11, arrival_rate=8.0)
+        eng = SimServingEngine(cfg, hw, io_bandwidth=IO_BANDWIDTHS["10Gbps"],
+                               system="cacheflow", stages=2, max_batch=16,
+                               kvstore=store)
+        s = eng.run(reqs).stats
+        label = "remote-only" if host_cap == 0 else "host-tier   "
+        print(f"  {label} mean={s['mean']:.3f}s p99={s['p99']:.3f}s")
+
+    # 3. 3D ablation: concurrent stage restoration via boundary activations
+    print("\n3D (stage-parallel) ablation:")
+    for system in ("cacheflow_2d", "cacheflow"):
+        reqs = generate("swe_bench", 64, seed=11, arrival_rate=8.0)
+        eng = SimServingEngine(cfg, hw, io_bandwidth=IO_BANDWIDTHS["10Gbps"],
+                               system=system, stages=4, max_batch=16)
+        s = eng.run(reqs).stats
+        print(f"  {system:14s} mean={s['mean']:.3f}s p99={s['p99']:.3f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Serve a multi-turn chatbot workload end-to-end, comparing CacheFlow with
+the paper's baselines — both in simulation (paper scale) and for real on a
+reduced model.
+
+    PYTHONPATH=src python examples/serve_chatbot.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.config import HARDWARE, IO_BANDWIDTHS  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.serving import (RealServingEngine, Request, SimServingEngine,  # noqa: E402
+                           generate)
+
+
+def main():
+    # --- paper-scale simulation: Qwen3-8B on H100, 10 Gbps KV channel -----
+    cfg = get_config("qwen3-8b")
+    print("LMSys-Chat workload, 48 requests, H100 + 10 Gbps (simulated):")
+    base_mean = None
+    for system in ("vllm", "lmcache", "cake", "cacheflow"):
+        reqs = generate("lmsys_chat", 48, seed=7)
+        eng = SimServingEngine(cfg, HARDWARE["h100"],
+                               io_bandwidth=IO_BANDWIDTHS["10Gbps"],
+                               system=system, stages=2, max_batch=8)
+        rep = eng.run(reqs)
+        s = rep.stats
+        print(f"  {system:10s} mean={s['mean']:.3f}s p50={s['p50']:.3f}s "
+              f"p90={s['p90']:.3f}s p99={s['p99']:.3f}s")
+        if system != "cacheflow":
+            base_mean = min(base_mean or 1e9, s["mean"])
+        else:
+            print(f"  -> TTFT reduction vs best baseline: "
+                  f"{1 - s['mean'] / base_mean:.1%} (paper band: 10-62%)")
+
+    # --- real execution on a reduced model --------------------------------
+    print("\nReal execution (reduced model, wall clock, KV verified):")
+    cfgr = get_config("qwen3-8b").reduced()
+    model = build_model(cfgr)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = RealServingEngine(model, params, system="cacheflow", stages=2,
+                            chunk_size=16)
+    reqs = [Request(f"turn-{i}", 0.0, prefix_len=48 + 32 * i, new_len=16)
+            for i in range(3)]
+    rep = eng.serve(reqs, verify=True)
+    for rid, t in rep.ttfts.items():
+        print(f"  {rid}: TTFT {t * 1e3:.1f} ms (restored KV verified exact)")
+
+
+if __name__ == "__main__":
+    main()

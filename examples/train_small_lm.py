@@ -1,0 +1,25 @@
+"""Train a ~0.5B-family reduced LM for a few hundred steps on CPU with the
+full production substrate: deterministic sharded data, AdamW + cosine,
+remat, async checkpointing, and an injected host failure + restart.
+
+    PYTHONPATH=src python examples/train_small_lm.py
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import run  # noqa: E402
+
+
+def main():
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        run("qwen1.5-0.5b", reduced=True, steps=200, ckpt_dir=ckpt_dir,
+            global_batch=8, seq_len=64, ckpt_every=25,
+            fail_at_step=60,           # prove checkpoint/restart works
+            peak_lr=3e-3)
+
+
+if __name__ == "__main__":
+    main()

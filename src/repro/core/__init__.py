@@ -1,0 +1,17 @@
+"""CacheFlow core: the paper's contribution as a composable library.
+
+  cost_model — T_comp/T_io models, harmonic-mean bound (Eq. 1), Eq. 2, L_Δ
+  plans      — token-/layer-wise two-pointer claim machines
+  scheduler  — batch-aware 3D scheduler (Algorithm 1)
+  boundary   — boundary-activation store (3rd dimension, §3.2)
+  simulator  — discrete-event engine (batched contention, stragglers, Fig. 5)
+  executor   — real-JAX restoration with bit-exact verification
+  baselines  — vLLM / LMCache / SGLang / Cake comparators
+  profiler   — offline L_Δ crossover profiling (Fig. 3)
+"""
+from repro.core.cost_model import CostModel  # noqa: F401
+from repro.core.plans import RequestPlan, TwoPointerPlan, make_request_plans  # noqa: F401
+from repro.core.scheduler import BatchScheduler, ScheduledOp  # noqa: F401
+from repro.core.boundary import BoundaryStore, StoredRequest, stage_bounds  # noqa: F401
+from repro.core.simulator import RestorationSimulator, SimRequest, SimResult  # noqa: F401
+from repro.core.executor import RestorationExecutor  # noqa: F401

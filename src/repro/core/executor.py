@@ -1,0 +1,308 @@
+"""Real-JAX restoration executor.
+
+Executes CacheFlow restoration ops (from the BatchScheduler / plans) on an
+actual model: compute ops run chunk/layer forwards on device, load ops copy
+KV slices from the stored payload — then the restored cache is verified
+against the full-prefill ground truth.  The simulator measures the schedule;
+this executor proves its *correctness* (restored KV ≡ recomputed KV for any
+legal op interleaving — a property test randomises the interleaving).
+
+Requests are single-sequence (B = 1) as in the serving engine.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.boundary import BoundaryStore, StoredRequest, stage_bounds
+from repro.core.plans import RequestPlan, make_request_plans
+from repro.core.scheduler import BatchScheduler, ScheduledOp
+from repro.models.model import Model
+
+ATTN_FIELDS = ("k", "v", "ckv")
+
+
+class RestorationExecutor:
+    def __init__(self, model: Model, params, store: Optional[BoundaryStore] = None,
+                 *, chunk_size: int = 16, stages: int = 1):
+        self.model = model
+        self.params = params
+        self.store = store or BoundaryStore()
+        self.chunk_size = chunk_size
+        self.stages = stages
+        self.bounds = stage_bounds(model.cfg.num_layers, stages)
+        # live restoration state: rid -> dict(cache=..., act={stage: x}, ...)
+        self._live: Dict[str, dict] = {}
+
+    # ------------------------------------------------------------------
+    # Previous turn: full (chunked) prefill; persist KV + boundaries + states
+    # ------------------------------------------------------------------
+    def remember(self, rid: str, inputs) -> StoredRequest:
+        m, cfg = self.model, self.model.cfg
+        n = inputs.shape[1]
+        cache = m.init_cache(1, n, dtype=m.compute_dtype)
+        boundaries = {s: [] for s in range(self.stages)}
+        snapshots: Dict[Tuple[int, int], dict] = {}
+        c = self.chunk_size
+        x_last = None
+        for ci, t0 in enumerate(range(0, n, c)):
+            t1 = min(n, t0 + c)
+            pos = jnp.arange(t0, t1, dtype=jnp.int32)[None]
+            chunk = inputs[:, t0:t1]
+            x = m.embed(self.params, chunk, pos)
+            for s, (lo, hi) in enumerate(self.bounds):
+                boundaries[s].append(x)
+                for i in range(lo, hi):
+                    x, cache = m.layer_chunk(self.params, i, x, pos, cache)
+                # snapshot recurrent state at end of this chunk for this stage
+                snap = _state_snapshot(cfg, cache)
+                if snap:
+                    snapshots[(s, ci)] = snap
+            x_last = x
+        logits = m.unembed(self.params, x_last[:, -1:])[:, 0]
+        req = StoredRequest(
+            request_id=rid, n_tokens=n, inputs=inputs,
+            kv_reference=jax.tree.map(lambda a: a, cache),
+            boundaries={s: jnp.concatenate(bs, axis=1) for s, bs in boundaries.items()},
+            state_snapshots=snapshots, final_logits=logits)
+        self.store.put(req)
+        return req
+
+    # ------------------------------------------------------------------
+    # Restoration
+    # ------------------------------------------------------------------
+    def begin_restore(self, rid: str):
+        req = self.store.get(rid)
+        m = self.model
+        cache = m.init_cache(1, req.n_tokens, dtype=m.compute_dtype)
+        self._live[rid] = {"cache": cache, "act": {}, "req": req}
+
+    def make_plans(self, rid: str, *, l_delta: int, strategy: Optional[str] = None
+                   ) -> List[RequestPlan]:
+        req = self.store.get(rid)
+        cfg = self.model.cfg
+        if cfg.rwkv is not None:
+            strategy = "layer"      # token pointers inapplicable (DESIGN §5)
+        return make_request_plans(rid, req.n_tokens, chunk_size=self.chunk_size,
+                                  l_delta=l_delta, num_layers=cfg.num_layers,
+                                  stage_bounds=self.bounds if self.stages > 1 else None,
+                                  strategy=strategy)
+
+    def execute_op(self, op: ScheduledOp):
+        if op.kind == "compute":
+            self._exec_compute(op)
+        else:
+            self._exec_load(op)
+
+    # -- compute ---------------------------------------------------------
+    def _stage_input(self, rid: str, stage: int, t0: int, t1: int):
+        """Activations entering the stage's first layer for tokens [t0,t1)."""
+        m = self.model
+        live = self._live[rid]
+        req: StoredRequest = live["req"]
+        if stage == 0:
+            pos = jnp.arange(t0, t1, dtype=jnp.int32)[None]
+            return m.embed(self.params, req.inputs[:, t0:t1], pos)
+        return self.store.read_boundary(rid, stage)[:, t0:t1]
+
+    def _exec_compute(self, op: ScheduledOp):
+        m = self.model
+        live = self._live[op.request_id]
+        cache = live["cache"]
+        t0, t1 = op.tokens
+        lo, hi = op.layers
+        pos = jnp.arange(t0, t1, dtype=jnp.int32)[None]
+        plan = _plan_of(live, op)
+        if plan.strategy == "token":
+            x = self._stage_input(op.request_id, op.stage, t0, t1)
+            for i in range(lo, hi):
+                x, cache = m.layer_chunk(self.params, i, x, pos, cache)
+        else:
+            # layer-wise: maintain the running full-prefix activation
+            key = ("act", op.stage)
+            if key not in live["act"]:
+                live["act"][key] = self._stage_input(op.request_id, op.stage,
+                                                     0, plan.n_tokens)
+            x = live["act"][key]
+            for i in range(lo, hi):
+                x, cache = m.layer_chunk(self.params, i, x, pos, cache)
+            live["act"][key] = x
+        live["cache"] = cache
+
+    # -- load --------------------------------------------------------------
+    def _exec_load(self, op: ScheduledOp):
+        cfg = self.model.cfg
+        live = self._live[op.request_id]
+        req: StoredRequest = live["req"]
+        cache, ref = live["cache"], req.kv_reference
+        t0, t1 = op.tokens
+        lo, hi = op.layers
+        plan = _plan_of(live, op)
+        kinds = cfg.layer_kinds()
+        slots = self.model.slots
+        for i in range(lo, hi):
+            kind, slot = slots[i]
+            if kind == "attention":
+                kp_ref = ref["kpos"][slot]
+                # slots whose stored position falls inside [t0, t1)
+                sel = np.nonzero((np.asarray(kp_ref) >= t0) & (np.asarray(kp_ref) < t1))[0]
+                if sel.size:
+                    sel = jnp.asarray(sel)
+                    for f in ATTN_FIELDS:
+                        if f in cache:
+                            upd = cache[f][slot].at[:, sel].set(ref[f][slot][:, sel])
+                            cache[f] = cache[f].at[slot].set(upd)
+                    cache["kpos"] = cache["kpos"].at[slot, sel].set(kp_ref[sel])
+            else:
+                # recurrent/rwkv state. Layer strategy: this layer is restored
+                # wholly by I/O -> apply its end-of-prefix snapshot now (compute
+                # never touches this slot). Token strategy: state fix-up happens
+                # in finalize_restore so op order cannot clobber the live state.
+                if plan.strategy == "layer":
+                    n_chunks = -(-plan.n_tokens // self.chunk_size)
+                    snap = req.state_snapshots.get((op.stage, n_chunks - 1))
+                    if snap:
+                        for f, arr in snap.items():
+                            cache[f] = cache[f].at[slot].set(arr[slot])
+        live["cache"] = cache
+
+    # ------------------------------------------------------------------
+    def restore(self, rid: str, *, l_delta: int = 0, strategy: Optional[str] = None,
+                plans: Optional[List[RequestPlan]] = None,
+                io_policy: str = "longest_remaining",
+                op_order: str = "alternate", rng: Optional[np.random.Generator] = None):
+        """Run a full restoration for one request; returns the live cache.
+
+        op_order: "alternate" | "io_first" | "compute_first" | "random" —
+        correctness must hold for ANY legal interleaving (property-tested).
+        """
+        self.begin_restore(rid)
+        if plans is None:
+            plans = self.make_plans(rid, l_delta=l_delta, strategy=strategy)
+        self._live[rid]["plans"] = {p.stage: p for p in plans}
+        sched = BatchScheduler(io_policy=io_policy)
+        sched.add_request(plans)
+        rng = rng or np.random.default_rng(0)
+        while not sched.all_done():
+            ops: List[ScheduledOp] = []
+            if op_order == "io_first":
+                order = ["load", "compute"]
+            elif op_order == "compute_first":
+                order = ["compute", "load"]
+            elif op_order == "random":
+                order = list(rng.permutation(["load", "compute"]))
+            else:
+                order = ["load", "compute"] if rng.random() < 0.5 else ["compute", "load"]
+            for what in order:
+                if what == "load":
+                    op = sched.next_io()
+                else:
+                    op = None
+                    for s in sched.stages():
+                        op = sched.next_compute(stage=s)
+                        if op:
+                            break
+                if op is not None:
+                    ops.append(op)
+            if not ops:
+                raise RuntimeError("scheduler stalled before completion")
+            for op in ops:
+                self.execute_op(op)
+                sched.complete(op)
+        self.finalize_restore(rid)
+        return self._live[rid]["cache"]
+
+    def finalize_restore(self, rid: str):
+        """Recurrent-state fix-up for token-wise plans on hybrid archs: the
+        end-of-prefix state must come from the tail chunk's snapshot whenever
+        I/O restored the tail (compute ops legitimately run the state only up
+        to the meeting point; op order must not matter)."""
+        cfg = self.model.cfg
+        if cfg.rglru is None and cfg.rwkv is None:
+            return
+        live = self._live[rid]
+        req: StoredRequest = live["req"]
+        cache = live["cache"]
+        kinds = cfg.layer_kinds()
+        for stage, plan in live["plans"].items():
+            if plan.strategy != "token" or plan.plan.io_done == 0:
+                continue
+            n_chunks = plan.plan.n_units
+            snap = req.state_snapshots.get((stage, n_chunks - 1))
+            if not snap:
+                continue
+            lo, hi = plan.layer_lo, plan.layer_hi
+            for i in range(lo, hi):
+                kind, slot = self.model.slots[i]
+                if kind != "attention":
+                    for f, arr in snap.items():
+                        cache[f] = cache[f].at[slot].set(arr[slot])
+        live["cache"] = cache
+
+    # ------------------------------------------------------------------
+    def verify(self, rid: str, atol: float = 2e-2) -> dict:
+        """Compare the live restored cache against the ground-truth payload.
+        Returns max-abs errors per field (raises on mismatch)."""
+        live = self._live[rid]
+        req: StoredRequest = live["req"]
+        errs = {}
+        for f in req.kv_reference:
+            a = np.asarray(req.kv_reference[f], np.float32)
+            b = np.asarray(live["cache"][f], np.float32)
+            if f == "kpos":
+                if not (a == b).all():
+                    raise AssertionError(f"kpos mismatch for {rid}")
+                errs[f] = 0.0
+                continue
+            err = float(np.max(np.abs(a - b))) if a.size else 0.0
+            errs[f] = err
+            if err >= atol:
+                raise AssertionError(f"{f} mismatch for {rid}: {err}")
+        return errs
+
+    def first_token_logits(self, rid: str, new_inputs):
+        """Prefill the new suffix on the restored cache -> first-token logits."""
+        m = self.model
+        live = self._live[rid]
+        req: StoredRequest = live["req"]
+        n = req.n_tokens
+        # grow cache to fit the suffix
+        c_new = new_inputs.shape[1]
+        cache = _grow_cache(self.model, live["cache"], n + c_new)
+        logits, cache = m.prefill_chunk(self.params, new_inputs, cache, n)
+        live["cache"] = cache
+        return logits
+
+
+# ---------------------------------------------------------------------------
+
+
+def _plan_of(live: dict, op: ScheduledOp) -> RequestPlan:
+    return live["plans"][op.stage]
+
+
+def _state_snapshot(cfg, cache: dict) -> dict:
+    out = {}
+    for f in ("conv", "lru", "wkv", "shift_tm", "shift_cm"):
+        if f in cache:
+            out[f] = cache[f]
+    return out
+
+
+def _grow_cache(model: Model, cache: dict, new_len: int) -> dict:
+    from repro.models.kvcache import cache_seq_len
+    target = cache_seq_len(model.cfg, new_len)
+    out = {}
+    for f, a in cache.items():
+        if f in ("k", "v", "ckv") and a.shape[2] < target:
+            pad = [(0, 0)] * a.ndim
+            pad[2] = (0, target - a.shape[2])
+            out[f] = jnp.pad(a, pad)
+        elif f == "kpos" and a.shape[1] < target:
+            out[f] = jnp.pad(a, ((0, 0), (0, target - a.shape[1])), constant_values=-1)
+        else:
+            out[f] = a
+    return out

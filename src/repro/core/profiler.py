@@ -1,0 +1,67 @@
+"""Offline profiling for the adaptive strategy crossover L_Δ (paper Fig. 3).
+
+Two modes:
+  * analytic — sweep the cost model's T_token(N) / T_layer(N) curves
+    (what production deployments would tabulate per hardware SKU);
+  * measured — time the real-JAX executor's token-wise vs layer-wise
+    restoration on a small model (validates that the crossover exists and is
+    content-agnostic; used by tests/benchmarks on CPU).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.cost_model import CostModel
+from repro.core.executor import RestorationExecutor
+
+
+@dataclass
+class CrossoverProfile:
+    lengths: List[int]
+    t_token: List[float]
+    t_layer: List[float]
+    l_delta: int
+
+
+def profile_analytic(cost: CostModel, lengths: Optional[List[int]] = None
+                     ) -> CrossoverProfile:
+    lengths = lengths or [2 ** i for i in range(7, 16)]
+    t_tok = [cost.t_token_wise(n) for n in lengths]
+    t_lay = [cost.t_layer_wise(n) for n in lengths]
+    l_delta = next((n for n, tt, tl in zip(lengths, t_tok, t_lay) if tt <= tl),
+                   lengths[-1])
+    return CrossoverProfile(lengths, t_tok, t_lay, l_delta)
+
+
+def profile_measured(executor: RestorationExecutor, make_inputs,
+                     lengths: Optional[List[int]] = None, repeats: int = 2
+                     ) -> CrossoverProfile:
+    """Times real restoration (compute-only wall clock — I/O is a copy on CPU,
+    so this measures the compute-path shapes the paper's Fig. 3 is about)."""
+    lengths = lengths or [32, 64, 128, 256]
+    t_tok, t_lay = [], []
+    for n in lengths:
+        inputs = make_inputs(n)
+        rid = f"prof-{n}"
+        executor.remember(rid, inputs)
+        for strategy, acc in (("token", t_tok), ("layer", t_lay)):
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                cache = executor.restore(rid, strategy=strategy,
+                                         op_order="compute_first")
+                jax.block_until_ready(jax.tree.leaves(cache)[0])
+                best = min(best, time.perf_counter() - t0)
+            acc.append(best)
+    l_delta = next((n for n, tt, tl in zip(lengths, t_tok, t_lay) if tt <= tl),
+                   lengths[-1])
+    return CrossoverProfile(lengths, t_tok, t_lay, l_delta)
+
+
+def utilization_report(sim_result) -> Dict[str, float]:
+    return {"compute_busy": sim_result.compute_busy, "io_busy": sim_result.io_busy}

@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (batch_axes, cache_pspecs, choose_mode,  # noqa: F401
+                                        data_pspecs, opt_pspecs, param_pspecs,
+                                        to_named)
+from repro.distributed.fault_tolerance import (FailureDetector, HostFailure,  # noqa: F401
+                                               StragglerMonitor, TrainingSupervisor)
+from repro.distributed.elastic import replace_on_mesh, validate_divisibility  # noqa: F401

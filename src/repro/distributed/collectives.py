@@ -1,0 +1,100 @@
+"""Explicit-collective attention: sequence-sharded decode with LSE combine.
+
+When kv-heads don't divide the "model" axis the decode cache is sharded
+along its SEQUENCE dim.  Naive attention then all-gathers the whole cache
+every layer (~GBs/step for a 123B × 32k × 128 cell).  This shard_map kernel
+instead computes flash-style partial attention per sequence shard and
+combines with log-sum-exp weights — the communication drops to the partial
+accumulators: psum of (B, Hq, Dh) + two (B, Hq) rows, ~10⁴× less.
+
+This is the TPU analogue of flash-decode split-K, and the restoration
+chunk/decode hot path CacheFlow cares about (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.constraints import _ambient_mesh
+
+NEG_INF = -1e30
+
+
+def lse_decode_attention(q, k, v, kpos, q_pos, *, scale: float, window: int = 0,
+                         seq_axis: str = "model", batch_axes=("pod", "data"),
+                         tail=None):
+    """q: (B,1,Hq,Dh); k/v: (B,S,Hkv,Dh) S-sharded over ``seq_axis``;
+    kpos: (S,); q_pos: (B,1) positions. Returns (B,1,Hq,Dv).
+
+    ``tail``: optional (tail_k, tail_v, tail_kpos) append buffer — small and
+    replicated; it is merged LOCALLY on shard 0 (gated via axis_index) so the
+    big cache never pays a resharding collective for the concat."""
+    mesh = _ambient_mesh()
+    if mesh is None or mesh.shape.get(seq_axis, 1) == 1:
+        if tail is not None:
+            k = jnp.concatenate([k, tail[0].astype(k.dtype)], axis=1)
+            v = jnp.concatenate([v, tail[1].astype(v.dtype)], axis=1)
+            kpos = jnp.concatenate([kpos, tail[2]])
+        return _local_decode(q, k, v, kpos, q_pos, scale, window)
+    bax = tuple(a for a in batch_axes if a in mesh.axis_names)
+    b = q.shape[0]
+    bspec = bax if (bax and b % _prod(mesh, bax) == 0 and b >= _prod(mesh, bax)) \
+        else None
+
+    def body(ql, kl, vl, kpl, qpl, *tl):
+        if tl:
+            tk, tv, tkp = tl
+            on_first = (jax.lax.axis_index(seq_axis) == 0)
+            tkp = jnp.where(on_first, tkp, -1)     # only shard 0 counts the tail
+            kl = jnp.concatenate([kl, tk.astype(kl.dtype)], axis=1)
+            vl = jnp.concatenate([vl, tv.astype(vl.dtype)], axis=1)
+            kpl = jnp.concatenate([kpl, tkp])
+        out, m, l = _partial_decode(ql, kl, vl, kpl, qpl, scale, window)
+        m_g = jax.lax.pmax(m, seq_axis)
+        w = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * w, seq_axis)
+        acc = jax.lax.psum(out * w[..., None], seq_axis)
+        return (acc / jnp.maximum(l_g, 1e-30)[..., None]).astype(ql.dtype)
+
+    in_specs = [P(bspec, None, None, None), P(bspec, seq_axis, None, None),
+                P(bspec, seq_axis, None, None), P(seq_axis), P(bspec, None)]
+    args = [q, k, v, kpos, q_pos]
+    if tail is not None:
+        in_specs += [P(bspec, None, None, None), P(bspec, None, None, None),
+                     P(None)]
+        args += list(tail)
+    return jax.shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                         out_specs=P(bspec, None, None, None))(*args)
+
+
+def _prod(mesh, axes):
+    out = 1
+    for a in axes:
+        out *= mesh.shape.get(a, 1)
+    return out
+
+
+def _partial_decode(q, k, v, kpos, q_pos, scale, window):
+    """Local flash partials. q: (B,1,Hq,Dh); k/v: (B,Sl,Hk,Dh); kpos (Sl,).
+    Returns (acc (B,1,Hq,Dv) UNNORMALISED, m (B,1,Hq), l (B,1,Hq))."""
+    b, _, hq, dh = q.shape
+    sl, hk = k.shape[1], k.shape[2]
+    g = hq // hk
+    qg = q.reshape(b, hk, g, dh).astype(jnp.float32)
+    sc = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32)) * scale
+    valid = (kpos >= 0)[None, :] & (kpos[None, :] <= q_pos)
+    if window > 0:
+        valid &= kpos[None, :] > q_pos - window
+    sc = jnp.where(valid[:, None, None], sc, NEG_INF)
+    m = sc.max(axis=-1)                                       # (B,Hk,G)
+    p = jnp.exp(sc - m[..., None])
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return (acc.reshape(b, 1, hq, v.shape[-1]),
+            m.reshape(b, 1, hq), l.reshape(b, 1, hq))
+
+
+def _local_decode(q, k, v, kpos, q_pos, scale, window):
+    acc, m, l = _partial_decode(q, k, v, kpos, q_pos, scale, window)
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)

@@ -1,0 +1,38 @@
+"""Elastic scaling: resume a checkpoint on a different mesh shape.
+
+PartitionSpecs in ``sharding.py`` are written against logical axis NAMES, not
+sizes, so the same spec tree re-places host-numpy checkpoint leaves onto any
+mesh whose axis sizes divide the array dims.  Scaling 1 pod ↔ 2 pods (or
+16×16 ↔ 8×8 in tests) is therefore: restore → device_put with the new mesh's
+NamedShardings → continue.  No resharding pass is needed on disk.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+
+def replace_on_mesh(host_tree, pspec_tree, mesh: Mesh):
+    """Place a host-numpy pytree onto ``mesh`` with the given spec tree."""
+    def put(arr, spec):
+        return jax.device_put(arr, NamedSharding(mesh, spec))
+    return jax.tree.map(put, host_tree, pspec_tree)
+
+
+def validate_divisibility(tree, pspec_tree, mesh: Mesh) -> list:
+    """Returns a list of (path, dim, axis) violations (empty = resharding ok)."""
+    bad = []
+
+    def check(path, arr, spec):
+        for d, ax in enumerate(tuple(spec)):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape.get(a, 1)
+            if arr.shape[d] % size:
+                bad.append((jax.tree_util.keystr(path), d, ax))
+
+    jax.tree_util.tree_map_with_path(check, tree, pspec_tree)
+    return bad

@@ -1,0 +1,198 @@
+"""Sharding rules per (architecture × input shape × mesh).
+
+Three modes:
+  * ``train``     — FSDP over "data" (weights + optimizer state ZeRO-3-style)
+                    + Megatron TP over "model"; batch over ("pod","data").
+  * ``serve_tp``  — TP over "model" only; weights replicated over "data"
+                    (small models: d_ff/heads/vocab sharded 16-way fits HBM).
+  * ``serve_2d``  — 2D tensor parallelism: d_model over "data" AND
+                    d_ff/heads/vocab over "model" (≥60B archs: 256-way weight
+                    shard is required to fit 16 GB/chip).
+
+Leaf rules are name-based over the model's param pytree; scan-stacked layers
+(leading L axis) get a ``None`` prepended automatically.  All sharded dims
+are exactly divisible for every assigned architecture on the 16×16 and
+2×16×16 production meshes (validated by the dry-run).
+
+KV-cache rule: batch over ("pod","data"); kv-heads over "model" when
+divisible, otherwise the cache *sequence* dim is sharded over "model"
+(sequence-parallel decode — see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models.model import Model
+
+# threshold above which serving needs 2D weight sharding (bf16 bytes / chip)
+_SERVE_2D_PARAM_THRESHOLD = 60e9
+
+
+def choose_mode(cfg: ModelConfig, shape: ShapeConfig) -> str:
+    if shape.kind == "train":
+        return "train"
+    total = cfg.param_counts()["total"]
+    return "serve_2d" if total > _SERVE_2D_PARAM_THRESHOLD else "serve_tp"
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+# name -> (train/2d spec, serve_tp spec); F = fsdp axis "data"
+def _leaf_rule(name: str, parent: str, fsdp: Optional[str]):
+    """Returns the PartitionSpec for the leaf's own (unstacked) dims."""
+    expert = parent == "moe" and name in ("w_gate", "w_up", "w_down", "router")
+    if expert:
+        if name == "router":
+            return P(fsdp, "model")
+        if name in ("w_gate", "w_up"):
+            return P("model", None, fsdp)       # (E, D, F)
+        return P("model", fsdp, None)           # w_down (E, F, D)
+    table = {
+        "embed": P("model", fsdp),
+        "unembed": P(fsdp, "model"),
+        "wq": P(fsdp, "model"), "wk": P(fsdp, "model"), "wv": P(fsdp, "model"),
+        "wo": P("model", fsdp),
+        "bq": P("model"), "bk": P("model"), "bv": P("model"),
+        "w_gate": P(fsdp, "model"), "w_up": P(fsdp, "model"),
+        "w_down": P("model", fsdp),
+        # MLA
+        "wq_a": P(fsdp, None), "wq_b": P(None, "model"),
+        "wkv_a": P(fsdp, None), "wkv_b": P(None, "model"),
+        # RG-LRU
+        "w_y": P(fsdp, "model"), "w_x": P(fsdp, "model"),
+        "w_out": P("model", fsdp),
+        "conv_w": P(None, "model"), "conv_b": P("model"),
+        "gate_a": P(None, None, None), "gate_i": P(None, None, None),
+        "gate_a_b": P("model"), "gate_i_b": P("model"), "lam": P("model"),
+        # RWKV
+        "w_r": P(fsdp, "model"), "w_k": P(fsdp, "model"), "w_v": P(fsdp, "model"),
+        "w_g": P(fsdp, "model"), "w_o": P("model", fsdp),
+        "cm_k": P(fsdp, "model"), "cm_v": P("model", fsdp), "cm_r": P(fsdp, "model"),
+        "decay_w1": P(fsdp, None), "decay_w2": P(None, "model"),
+        "mix_w1": P(fsdp, None), "mix_w2": P(None, None, "model"),
+    }
+    return table.get(name)  # None -> replicate (norms, small vectors)
+
+
+def param_pspecs(model: Model, mode: str):
+    """PartitionSpec pytree matching model.param_specs()."""
+    fsdp = "data" if mode in ("train", "serve_2d") else None
+    specs = model.param_specs()
+
+    def rule(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", None)) or str(getattr(p, "idx", ""))
+                 for p in path]
+        name = names[-1]
+        # norms keyed scale/bias live under norm subtrees
+        parent = names[-2] if len(names) >= 2 else ""
+        if name in ("scale", "bias"):
+            spec = None
+        else:
+            look_parent = parent
+            if parent not in ("moe",) and "moe" in names:
+                look_parent = "moe"
+            if name in ("w_gate", "w_up", "w_down") and "shared" in names:
+                look_parent = "mlp"
+            spec = _leaf_rule(name, look_parent, fsdp)
+        base = spec if spec is not None else P()
+        # pad to leaf rank: prepend None for the scan-stacked layer axis
+        base_t = tuple(base)
+        if len(base_t) < leaf.ndim:
+            base_t = (None,) * (leaf.ndim - len(base_t)) + base_t
+        elif len(base_t) > leaf.ndim:
+            base_t = base_t[-leaf.ndim:]
+        return P(*base_t)
+
+    return jax.tree_util.tree_map_with_path(rule, specs)
+
+
+def opt_pspecs(model: Model, mode: str):
+    from repro.training.optimizer import OptState
+    p = param_pspecs(model, mode)
+    return OptState(P(), jax.tree.map(lambda s: s, p), jax.tree.map(lambda s: s, p))
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def data_pspecs(cfg: ModelConfig, mesh: Mesh, kind: str, batch: int):
+    """Batch specs. train: {"tokens": (B, S+1)} or embeddings batch;
+    prefill: inputs (B, S); decode: tokens (B,) (+ positions scalar).
+    Batch dims smaller than the data axes replicate (long_500k B=1)."""
+    bax = batch_axes(mesh)
+    div = batch % max(1, _prod(mesh, bax)) == 0 and batch >= _prod(mesh, bax)
+    baxes = bax if div else None
+    b = P(baxes)
+    if kind == "train":
+        if cfg.input_mode == "tokens":
+            return {"tokens": b}
+        return {"embeddings": P(baxes, None, None), "labels": b}
+    if kind == "prefill":
+        return b if cfg.input_mode == "tokens" else P(baxes, None, None)
+    # decode: one token per sequence
+    return b if cfg.input_mode == "tokens" else P(baxes, None)
+
+
+def cache_pspecs(model: Model, mesh: Mesh, batch: int, seq: int):
+    """KV-cache specs for decode. See module docstring for the kv-head vs
+    sequence sharding rule."""
+    cfg = model.cfg
+    model_size = mesh.shape.get("model", 1)
+    bax = batch_axes(mesh)
+    batch_div = batch % max(1, _prod(mesh, bax)) == 0 and batch >= _prod(mesh, bax)
+    bspec = bax if batch_div else None
+    specs = {}
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(batch, seq))
+    for f, sds in cache_shapes.items():
+        if f in ("k", "v"):
+            hkv = cfg.num_kv_heads
+            s_dim = sds.shape[2]
+            if hkv % model_size == 0:
+                specs[f] = P(None, bspec, None, "model", None)
+            elif s_dim % model_size == 0:
+                specs[f] = P(None, bspec, "model", None, None)
+            else:
+                specs[f] = P(None, bspec, None, None, None)
+        elif f == "ckv":
+            s_dim = sds.shape[2]
+            specs[f] = P(None, bspec, "model" if s_dim % model_size == 0 else None, None)
+        elif f == "kpos":
+            specs[f] = P(None, None)
+        elif f == "wkv":
+            h = sds.shape[2]
+            specs[f] = P(None, bspec, "model" if h % model_size == 0 else None, None, None)
+        elif f in ("conv", "lru", "shift_tm", "shift_cm"):
+            w = sds.shape[-1]
+            specs[f] = P(*([None] * (sds.ndim - 1)), "model" if w % model_size == 0 else None)
+        else:
+            specs[f] = P(*([None] * sds.ndim))
+    return specs
+
+
+def _axsize(mesh: Mesh, a: str) -> int:
+    return mesh.shape.get(a, 1)
+
+
+def _prod(mesh: Mesh, axes) -> int:
+    out = 1
+    for a in axes:
+        out *= _axsize(mesh, a)
+    return out
+
+
+def to_named(mesh: Mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the restoration hot-spots.
+
+Each kernel package ships three modules:
+  kernel.py — ``pl.pallas_call`` body + BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (dispatches pallas / interpret / ref)
+  ref.py    — pure-jnp oracle used by the property tests
+
+Kernels:
+  flash_prefill — causal flash attention over [cached prefix || chunk]; the
+                  recompute-pointer step of CacheFlow token-wise restoration.
+  flash_decode  — GQA decode attention blocked over cache length with
+                  ring-buffer (kpos) masking.
+  rglru_scan    — RG-LRU gated linear recurrence (RecurrentGemma).
+  rwkv6_scan    — RWKV-6 wkv state recurrence, chunked, state in VMEM.
+
+On this CPU container kernels are validated with ``interpret=True``; on a
+real TPU fleet the same ``pallas_call`` lowers to Mosaic.
+"""

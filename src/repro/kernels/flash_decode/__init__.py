@@ -1,0 +1,1 @@
+from repro.kernels.flash_decode.ops import flash_decode_attention  # noqa: F401

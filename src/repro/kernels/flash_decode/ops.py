@@ -1,0 +1,16 @@
+"""Public wrapper for the decode attention kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_decode import kernel, ref
+
+
+def flash_decode_attention(q, k, v, kpos, q_pos, *, scale: float, window: int = 0,
+                           backend: str = "auto", bk: int = 256):
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return ref.flash_decode_ref(q, k, v, kpos, q_pos, scale=scale, window=window)
+    return kernel.flash_decode(q, k, v, kpos, q_pos, scale=scale, window=window,
+                               bk=bk, interpret=(backend == "interpret"))

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for flash_decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_decode_ref(q, k, v, kpos, q_pos, *, scale: float, window: int = 0):
+    b, hq, dh = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, dh).astype(jnp.float32)
+    sc = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32)) * scale
+    valid = (kpos >= 0) & (kpos <= q_pos)
+    if window > 0:
+        valid &= kpos > q_pos - window
+    sc = jnp.where(valid[None, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, dh).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.flash_prefill.ops import flash_prefill_attention  # noqa: F401

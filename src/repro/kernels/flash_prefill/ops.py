@@ -1,0 +1,36 @@
+"""Public wrapper: dispatches pallas (TPU) / interpret (CPU validation) / ref."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_prefill import kernel, ref
+
+
+def flash_prefill_attention(q, k, v, q_offset, kv_len, *, scale: float,
+                            window: int = 0, backend: str = "auto",
+                            bq: int = 128, bk: int = 128):
+    """See kernel.py for semantics. backend: auto|pallas|interpret|ref.
+
+    Non-block-aligned shapes are padded here (padded keys are masked via
+    kv_len; padded query rows are sliced off) so the kernel grid stays
+    MXU-aligned."""
+    import jax.numpy as jnp
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return ref.flash_prefill_ref(q, k, v, q_offset, kv_len, scale=scale,
+                                     window=window)
+    sq, skv = q.shape[1], k.shape[1]
+    pq = (-sq) % min(bq, max(sq, 1))
+    pk = (-skv) % min(bk, max(skv, 1))
+    if pq or pk:
+        qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        out = kernel.flash_prefill(qp, kp, vp, q_offset, kv_len, scale=scale,
+                                   window=window, bq=bq, bk=bk,
+                                   interpret=(backend == "interpret"))
+        return out[:, :sq]
+    return kernel.flash_prefill(q, k, v, q_offset, kv_len, scale=scale,
+                                window=window, bq=bq, bk=bk,
+                                interpret=(backend == "interpret"))

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash_prefill: naive masked softmax attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_prefill_ref(q, k, v, q_offset, kv_len, *, scale: float, window: int = 0):
+    """q: (B,Sq,Hq,Dh); k/v: (B,Skv,Hkv,Dh). Token i (abs pos q_offset+i)
+    attends to j iff j <= q_offset+i, j < kv_len (and window)."""
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, kf) * scale
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(skv)
+    mask = (k_pos[None, :] <= q_pos[:, None]) & (k_pos[None, :] < kv_len)
+    if window > 0:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, vf)
+    return o.reshape(b, sq, hq, dh).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.rglru_scan.ops import rglru_scan  # noqa: F401

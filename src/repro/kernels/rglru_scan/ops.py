@@ -1,0 +1,15 @@
+"""Public wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rglru_scan import kernel, ref
+
+
+def rglru_scan(log_a, b, h0, *, backend: str = "auto", bs: int = 256, bw: int = 512):
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return ref.rglru_scan_ref(log_a, b, h0)
+    return kernel.rglru_scan(log_a, b, h0, bs=bs, bw=bw,
+                             interpret=(backend == "interpret"))

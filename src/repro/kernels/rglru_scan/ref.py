@@ -1,0 +1,18 @@
+"""Oracle: associative-scan linear recurrence (same math as models/rglru.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(log_a, b, h0):
+    a = jnp.exp(log_a.astype(jnp.float32))
+    b = b.astype(jnp.float32).at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]

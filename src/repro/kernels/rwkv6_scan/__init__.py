@@ -1,0 +1,1 @@
+from repro.kernels.rwkv6_scan.ops import wkv6  # noqa: F401

@@ -1,0 +1,14 @@
+"""Public wrapper for the RWKV-6 wkv kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rwkv6_scan import kernel, ref
+
+
+def wkv6(r, k, v, w, u, s0, *, backend: str = "auto", bs: int = 256):
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return ref.wkv6_ref(r, k, v, w, u, s0)
+    return kernel.wkv6(r, k, v, w, u, s0, bs=bs, interpret=(backend == "interpret"))

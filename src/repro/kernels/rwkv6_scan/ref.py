@@ -1,0 +1,8 @@
+"""Oracle: sequential wkv recurrence (delegates to the model's lax.scan impl)."""
+from __future__ import annotations
+
+from repro.models.rwkv6 import wkv_scan_ref
+
+
+def wkv6_ref(r, k, v, w, u, s0):
+    return wkv_scan_ref(r, k, v, w, u, s0)

@@ -1,0 +1,176 @@
+"""Trip-count-aware HLO cost extraction.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, so any
+program built on ``lax.scan`` (scan-over-layers, grad accumulation, flash
+key-block scans, MoE group scans) under-reports FLOPs and collectives by the
+loop trip counts.  This module parses the compiled per-device HLO text:
+
+  * while trip counts come from ``backend_config known_trip_count`` (XLA
+    annotates statically-known loops),
+  * a call-graph DFS assigns every computation the product of enclosing trip
+    counts,
+  * dot FLOPs = 2 · prod(result dims) · prod(contracting dims) with operand
+    shapes resolved through a per-computation symbol table (matmuls dominate;
+    elementwise FLOPs are not counted — a slight underestimate),
+  * collective bytes use ring-algorithm per-device accounting.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8}
+
+_HDR = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_SYM = re.compile(r"%([\w\.\-]+)\s*=\s*\(?\s*(\w+)\[([\d,]*)\]")
+_WHILE = re.compile(r"\bwhile\(.*?condition=%([\w\.\-]+),\s*body=%([\w\.\-]+)")
+_TRIP = re.compile(r'known_trip_count[":{\s]+n[":\s]+"?(\d+)')
+_CALLS = re.compile(r"(?:calls|to_apply|condition|body)=%([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_DOT_LINE = re.compile(
+    r"%[\w\.\-]+\s*=\s*(\w+)\[([\d,]*)\][^=]*?\bdot\(%([\w\.\-]+)")
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_COLL = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[^\]]*\])(?:\{[^}]*\})?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _prod(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _nbytes(dt: str, dims: str) -> int:
+    return _prod(dims) * _DTYPE_BYTES.get(dt, 0)
+
+
+def analyze(hlo: str) -> dict:
+    # ---- split into computations, build symbol tables and call graph -----
+    comps: Dict[str, list] = {}
+    entry = None
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        m = _HDR.match(line.strip())
+        if m and line.endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            if raw.lstrip().startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+
+    symbols: Dict[str, Dict[str, tuple]] = {}
+    callees: Dict[str, set] = defaultdict(set)
+    trip_of: Dict[str, int] = {}
+    for name, lines in comps.items():
+        tab = {}
+        for line in lines:
+            s = _SYM.search(line)
+            if s:
+                tab[s.group(1)] = (s.group(2), s.group(3))
+            w = _WHILE.search(line)
+            if w:
+                cond, body = w.group(1), w.group(2)
+                t = _TRIP.search(line)
+                trip = int(t.group(1)) if t else 1
+                trip_of[body] = trip
+                trip_of[cond] = trip
+                callees[name].update([cond, body])
+            else:
+                for c in _CALLS.findall(line):
+                    callees[name].add(c)
+                b = _BRANCHES.search(line)
+                if b:
+                    for c in re.split(r",\s*", b.group(1)):
+                        callees[name].add(c.strip().lstrip("%"))
+        # header params also define symbols (needed for dot operand lookup)
+        symbols[name] = tab
+    # add computation parameter shapes
+    for raw in hlo.splitlines():
+        m = _HDR.match(raw.strip())
+        if m:
+            name = m.group(1)
+            for pm in re.finditer(r"([\w\.\-]+):\s*\(?\s*(\w+)\[([\d,]*)\]",
+                                  raw):
+                symbols[name].setdefault(pm.group(1), (pm.group(2), pm.group(3)))
+
+    # ---- multipliers via DFS ---------------------------------------------
+    mult: Dict[str, float] = defaultdict(float)
+
+    def visit(name: str, m: float, depth: int = 0):
+        if depth > 64 or name not in comps or mult[name] >= m:
+            return
+        mult[name] = m
+        for c in callees.get(name, ()):
+            visit(c, m * trip_of.get(c, 1), depth + 1)
+
+    if entry is None and comps:
+        entry = next(iter(comps))
+    if entry:
+        visit(entry, 1.0)
+    for name in comps:
+        if mult[name] == 0.0:
+            mult[name] = 1.0
+
+    # ---- accumulate -------------------------------------------------------
+    flops = 0.0
+    coll: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    for name, lines in comps.items():
+        m = mult[name]
+        tab = symbols[name]
+        for line in lines:
+            d = _DOT_LINE.search(line)
+            if d:
+                res_dt, res_dims, lhs_name = d.group(1), d.group(2), d.group(3)
+                if res_dt in _DTYPE_BYTES:
+                    contract = 1
+                    lc = _LHS_CONTRACT.search(line)
+                    lhs = tab.get(lhs_name)
+                    if lc and lhs:
+                        dims = [int(x) for x in lhs[1].split(",") if x]
+                        for idx in (int(i) for i in lc.group(1).split(",") if i):
+                            if idx < len(dims):
+                                contract *= dims[idx]
+                    flops += 2.0 * _prod(res_dims) * contract * m
+                continue
+            c = _COLL.search(line)
+            if c:
+                shape_str = c.group(1) or c.group(2)
+                kind = c.group(3)
+                r = sum(_nbytes(dt, dims) for dt, dims in _SHAPE.findall(shape_str))
+                g = _GROUPS.search(line)
+                n = int(g.group(2)) if g else 2
+                if kind == "all-gather":
+                    moved = r * (n - 1) / max(1, n)
+                elif kind == "reduce-scatter":
+                    moved = r * (n - 1)
+                elif kind == "all-reduce":
+                    moved = 2 * r * (n - 1) / max(1, n)
+                elif kind == "all-to-all":
+                    moved = r * (n - 1) / max(1, n)
+                else:
+                    moved = r
+                coll[kind] += moved * m
+                counts[kind] += 1
+    return {
+        "dot_flops": flops,
+        "collective_bytes": dict(coll),
+        "collective_total_bytes": sum(coll.values()),
+        "collective_counts": dict(counts),
+        "while_trip_counts": trip_of,
+    }

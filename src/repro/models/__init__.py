@@ -1,0 +1,2 @@
+from repro.models.model import Model, build_model  # noqa: F401
+from repro.models.kvcache import init_cache, layer_slots, cache_bytes  # noqa: F401

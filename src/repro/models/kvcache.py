@@ -1,0 +1,74 @@
+"""KV-cache / recurrent-state pytrees.
+
+The cache is a flat dict of stacked arrays (leading axis = layer slot) so the
+CacheFlow restoration executor can slice per-layer, per-token-range views —
+exactly the granularity of the paper's token/layer two-pointer plans.
+
+Fields (present depending on architecture):
+  k, v      : (n_attn, B, S_cache, H_kv, Dh)       attention KV
+  ckv       : (n_attn, B, S_cache, kv_lora + rope) MLA compressed KV
+  kpos      : (n_attn, S_cache) int32              position of each cache slot
+                                                   (-1 = empty; ring buffer for
+                                                   windowed attention)
+  conv      : (n_rec, B, conv_w - 1, W)            RG-LRU conv1d tail
+  lru       : (n_rec, B, W) float32                RG-LRU hidden state
+  wkv       : (n_rwkv, B, H, Dh, Dh) float32       RWKV6 state matrix
+  shift_tm  : (n_rwkv, B, D)                       RWKV token-shift (time mix)
+  shift_cm  : (n_rwkv, B, D)                       RWKV token-shift (channel mix)
+
+Positions/lengths are carried *outside* the cache (launcher passes them), so
+the cache stays a plain array pytree.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def layer_slots(cfg: ModelConfig) -> dict:
+    """Map layer index -> (kind, slot index within that kind's stacked array)."""
+    slots, counters = {}, {"attention": 0, "recurrent": 0, "rwkv": 0}
+    for i, kind in enumerate(cfg.layer_kinds()):
+        slots[i] = (kind, counters[kind])
+        counters[kind] += 1
+    return slots
+
+
+def cache_seq_len(cfg: ModelConfig, max_len: int) -> int:
+    """Windowed archs only ever hold ``attn_window`` keys (ring buffer)."""
+    if cfg.attn_window:
+        return min(max_len, cfg.attn_window)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    kinds = cfg.layer_kinds()
+    n_attn = kinds.count("attention")
+    n_rec = kinds.count("recurrent")
+    n_rwkv = kinds.count("rwkv")
+    s = cache_seq_len(cfg, max_len)
+    cache: dict = {}
+    if n_attn:
+        if cfg.mla is not None:
+            d_c = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+            cache["ckv"] = jnp.zeros((n_attn, batch, s, d_c), dtype)
+        else:
+            cache["k"] = jnp.zeros((n_attn, batch, s, cfg.num_kv_heads, cfg.head_dim), dtype)
+            cache["v"] = jnp.zeros((n_attn, batch, s, cfg.num_kv_heads, cfg.head_dim), dtype)
+        cache["kpos"] = jnp.full((n_attn, s), -1, jnp.int32)
+    if n_rec:
+        w = cfg.rglru.lru_width or cfg.d_model
+        cache["conv"] = jnp.zeros((n_rec, batch, cfg.rglru.conv1d_width - 1, w), dtype)
+        cache["lru"] = jnp.zeros((n_rec, batch, w), jnp.float32)
+    if n_rwkv:
+        h = cfg.d_model // cfg.rwkv.head_size
+        cache["wkv"] = jnp.zeros((n_rwkv, batch, h, cfg.rwkv.head_size, cfg.rwkv.head_size),
+                                 jnp.float32)
+        cache["shift_tm"] = jnp.zeros((n_rwkv, batch, cfg.d_model), dtype)
+        cache["shift_cm"] = jnp.zeros((n_rwkv, batch, cfg.d_model), dtype)
+    return cache
+
+
+def cache_bytes(cache: dict) -> int:
+    return sum(int(a.size) * a.dtype.itemsize for a in cache.values())

@@ -1,0 +1,119 @@
+"""RecurrentGemma / Griffin recurrent block: conv1d + RG-LRU.
+
+    y = W_out( gelu(W_y x) ⊙ RG-LRU(conv1d(W_x x)) )
+
+RG-LRU (per channel, block-diagonal gates per head):
+    r_t = σ(W_a z_t + b_a)                recurrence gate
+    i_t = σ(W_i z_t + b_i)                input gate
+    log a_t = -c · softplus(Λ) · r_t      (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ z_t)
+
+The recurrence is h_t = a_t h_{t-1} + b_t — a first-order linear recurrence
+executed with ``jax.lax.associative_scan`` (parallel in time; the Pallas
+``rglru_scan`` kernel implements the same contraction blocked for VMEM).
+
+The carried state (conv tail + h) is O(1) in sequence length: this is what
+makes recurrentgemma a ``long_500k``-capable arch, and it is the unit the
+CacheFlow executor snapshots at chunk boundaries for hybrid-arch restoration.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init
+
+_C = 8.0
+_MAX_SQRT_GRADIENT = 1000.0
+
+
+def init_rglru_block(key, cfg: ModelConfig, dtype) -> dict:
+    g = cfg.rglru
+    d = cfg.d_model
+    w = g.lru_width or d
+    nh = g.num_rglru_heads or max(1, w // 128)
+    hd = w // nh
+    ks = jax.random.split(key, 8)
+    # Λ init so that a^c ∈ [0.9, 0.999] (Griffin appendix)
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^{-1}(-log u / c)
+    return {
+        "w_y": dense_init(ks[1], (d, w), dtype),
+        "w_x": dense_init(ks[2], (d, w), dtype),
+        "conv_w": dense_init(ks[3], (g.conv1d_width, w), dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "gate_a": dense_init(ks[4], (nh, hd, hd), dtype, in_axis=1),
+        "gate_a_b": jnp.zeros((w,), dtype),
+        "gate_i": dense_init(ks[5], (nh, hd, hd), dtype, in_axis=1),
+        "gate_i_b": jnp.zeros((w,), dtype),
+        "lam": lam.astype(jnp.float32),
+        "w_out": dense_init(ks[6], (w, d), dtype),
+    }
+
+
+def _gates(params: dict, z: jax.Array, nh: int):
+    """z: (B, S, W) -> log_a (B,S,W) fp32, gated input b (B,S,W) fp32."""
+    b, s, w = z.shape
+    zh = z.reshape(b, s, nh, w // nh)
+    ra = jnp.einsum("bsnh,nhk->bsnk", zh, params["gate_a"].astype(z.dtype)).reshape(b, s, w)
+    ri = jnp.einsum("bsnh,nhk->bsnk", zh, params["gate_i"].astype(z.dtype)).reshape(b, s, w)
+    r = jax.nn.sigmoid(ra.astype(jnp.float32) + params["gate_a_b"].astype(jnp.float32))
+    i = jax.nn.sigmoid(ri.astype(jnp.float32) + params["gate_i_b"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a2 = jnp.exp(2 * log_a)
+    gated = i * z.astype(jnp.float32)
+    b_t = jnp.sqrt(jnp.clip(1.0 - a2, 1.0 / _MAX_SQRT_GRADIENT**2, 1.0)) * gated
+    return log_a, b_t
+
+
+def lru_scan(log_a: jax.Array, b_t: jax.Array, h0: jax.Array):
+    """h_t = exp(log_a_t) h_{t-1} + b_t along axis 1 via associative scan.
+    log_a/b_t: (B, S, W) fp32; h0: (B, W) fp32. Returns (h (B,S,W), h_last)."""
+    a = jnp.exp(log_a)
+    # fold h0 into the first step
+    b_t = b_t.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, b_t), axis=1)
+    return h, h[:, -1]
+
+
+def causal_conv1d(z: jax.Array, conv_w: jax.Array, conv_b: jax.Array, tail: jax.Array):
+    """Depthwise causal conv. z: (B,S,W); conv_w: (K,W); tail: (B,K-1,W) —
+    the last K-1 inputs from the previous chunk. Returns (out, new_tail)."""
+    k = conv_w.shape[0]
+    zc = jnp.concatenate([tail.astype(z.dtype), z], axis=1)       # (B, S+K-1, W)
+    out = sum(zc[:, i : i + z.shape[1]] * conv_w[i].astype(z.dtype) for i in range(k))
+    out = out + conv_b.astype(z.dtype)
+    new_tail = zc[:, -(k - 1):] if k > 1 else tail
+    return out, new_tail
+
+
+def rglru_full(cfg: ModelConfig, params: dict, x: jax.Array,
+               conv_tail: jax.Array, h0: jax.Array, backend: str = "auto"):
+    """Full/chunk forward. x: (B,S,D). Returns (out (B,S,D), conv_tail', h')."""
+    g = cfg.rglru
+    w = g.lru_width or cfg.d_model
+    nh = g.num_rglru_heads or max(1, w // 128)
+    y = jax.nn.gelu(x @ params["w_y"].astype(x.dtype))
+    z = x @ params["w_x"].astype(x.dtype)
+    z, conv_tail = causal_conv1d(z, params["conv_w"], params["conv_b"], conv_tail)
+    log_a, b_t = _gates(params, z, nh)
+    if backend == "pallas":
+        from repro.kernels.rglru_scan import ops as _ops
+        h, h_last = _ops.rglru_scan(log_a, b_t, h0)
+    else:
+        h, h_last = lru_scan(log_a, b_t, h0)
+    out = (y * h.astype(x.dtype)) @ params["w_out"].astype(x.dtype)
+    return out, conv_tail, h_last
+
+
+def rglru_step(cfg: ModelConfig, params: dict, x: jax.Array,
+               conv_tail: jax.Array, h0: jax.Array):
+    """Single decode step. x: (B,1,D). Same returns as rglru_full."""
+    return rglru_full(cfg, params, x, conv_tail, h0)

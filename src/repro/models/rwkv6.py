@@ -1,0 +1,187 @@
+"""RWKV-6 "Finch" block: data-dependent-decay time mix + channel mix.
+
+Time mix (per head, head_size = Dh; state S ∈ R^{Dh×Dh}):
+    S_t = diag(w_t) S_{t-1} + k_t vᵀ_t
+    y_t = (S_{t-1} + diag(u ⊙ k_t) · (k̂_t v̂ᵀ_t? — bonus term)ᵀ) r_t
+        = Sᵀ_{t-1} r_t + (r_t · k_t)(u ⊙ v_t)      [equivalent contraction]
+with data-dependent decay  w_t = exp(−exp(w0 + tanh(x_w W1) W2)) ∈ (0,1)^D
+and data-dependent token-shift mixing (the "ddlerp" five-way LoRA).
+
+The recurrence is sequential over time (diag decay ⇒ associative, but the
+(Dh×Dh) state makes a full associative scan memory-prohibitive); the ref path
+uses ``lax.scan`` per token, the ops path a *chunked* scan (parallel within a
+chunk, sequential across chunks — the structure the Pallas ``rwkv6_scan``
+kernel implements with the state resident in VMEM).
+
+Attention-free: no KV cache. "Restoration" for this arch is loading the O(1)
+per-layer state — see DESIGN.md §5 (token/layer pointers inapplicable).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init
+
+_MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def init_rwkv_block(key, cfg: ModelConfig, dtype) -> dict:
+    r = cfg.rwkv
+    d = cfg.d_model
+    h = d // r.head_size
+    ks = jax.random.split(key, 16)
+    p = {
+        # time-mix projections
+        "w_r": dense_init(ks[0], (d, d), dtype),
+        "w_k": dense_init(ks[1], (d, d), dtype),
+        "w_v": dense_init(ks[2], (d, d), dtype),
+        "w_g": dense_init(ks[3], (d, d), dtype),
+        "w_o": dense_init(ks[4], (d, d), dtype),
+        # data-dependent decay LoRA
+        "decay_base": jnp.full((d,), -6.0, jnp.float32),
+        "decay_w1": dense_init(ks[5], (d, r.decay_lora_rank), dtype),
+        "decay_w2": dense_init(ks[6], (r.decay_lora_rank, d), dtype),
+        "bonus_u": (jax.random.normal(ks[7], (h, r.head_size), jnp.float32) * 0.1),
+        # ddlerp token-shift: base mus + shared lora
+        "mix_base": (jax.random.normal(ks[8], (len(_MIX_NAMES), d), jnp.float32) * 0.02),
+        "mix_w1": dense_init(ks[9], (d, len(_MIX_NAMES) * r.tokenshift_lora_rank), dtype),
+        "mix_w2": dense_init(ks[10], (len(_MIX_NAMES), r.tokenshift_lora_rank, d), dtype,
+                             in_axis=1),
+        "ln_y_scale": jnp.ones((d,), dtype),   # per-head groupnorm on y
+        "ln_y_bias": jnp.zeros((d,), dtype),
+        # channel-mix
+        "cm_mix_k": (jax.random.normal(ks[11], (d,), jnp.float32) * 0.02),
+        "cm_mix_r": (jax.random.normal(ks[12], (d,), jnp.float32) * 0.02),
+        "cm_k": dense_init(ks[13], (d, cfg.d_ff), dtype),
+        "cm_v": dense_init(ks[14], (cfg.d_ff, d), dtype),
+        "cm_r": dense_init(ks[15], (d, d), dtype),
+    }
+    return p
+
+
+def _ddlerp(params: dict, x: jax.Array, x_prev: jax.Array, rank: int):
+    """Data-dependent five-way token-shift mix -> dict name -> mixed input."""
+    xx = x_prev - x
+    base = x + xx * params["mix_base"][_MIX_NAMES.index("w")].astype(x.dtype)  # seed mix
+    lora = jnp.tanh(base @ params["mix_w1"].astype(x.dtype))
+    lora = lora.reshape(*x.shape[:-1], len(_MIX_NAMES), rank)
+    deltas = jnp.einsum("...nr,nrd->...nd", lora, params["mix_w2"].astype(x.dtype))
+    out = {}
+    for i, name in enumerate(_MIX_NAMES):
+        mu = params["mix_base"][i].astype(x.dtype) + deltas[..., i, :]
+        out[name] = x + xx * mu
+    return out
+
+
+def wkv_scan_ref(r, k, v, w, u, s0):
+    """Sequential wkv recurrence (oracle).
+
+    r,k,v: (B,S,H,Dh); w: (B,S,H,Dh) decay in (0,1); u: (H,Dh);
+    s0: (B,H,Dh,Dh).  Returns (y (B,S,H,Dh), s_last).
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp           # (B,H,Dh) each
+        # y_t = S^T r + (r·k)(u ⊙ v)?  Use explicit contraction:
+        # y[d_v] = sum_dk r[dk] * (S[dk,dv] + u[dk]*k[dk]*v[dv])
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s) \
+            + jnp.einsum("bhk,bhk,bhv->bhv", r_t, u[None] * k_t, v_t)
+        s = s * w_t[..., None] + jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        return s, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    s_last, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), s_last
+
+
+def wkv_scan_chunked(r, k, v, w, u, s0, chunk: int = 64):
+    """Chunked wkv: O(S·Dh) state traffic instead of per-token scan.
+
+    Within a chunk the contribution of the entering state and the intra-chunk
+    "linear attention" term are computed in parallel (this mirrors the Pallas
+    kernel's VMEM blocking).
+    """
+    b, s, h, dh = r.shape
+    if s % chunk:
+        return wkv_scan_ref(r, k, v, w, u, s0)
+    n = s // chunk
+    rc, kc, vc, wc = (a.reshape(b, n, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+                      for a in (r, k, v, w))
+
+    def body(s_in, inp):
+        r_t, k_t, v_t, w_t = inp                       # (B,C,H,Dh)
+        logw = jnp.log(jnp.maximum(w_t, 1e-30))
+        cum = jnp.cumsum(logw, axis=1)                 # log ∏_{i<=t} w_i  (decreasing)
+        cum_ex = cum - logw                            # log ∏_{i<t}  w_i
+        # state contribution: y_state[t] = (r_t ⊙ e^{cum_ex[t]})^T S_in   (e^{cum_ex} ≤ 1)
+        y = jnp.einsum("bchk,bhkv->bchv", r_t * jnp.exp(cum_ex), s_in)
+        # intra-chunk: coeff(t,j<t) = Σ_k r_tk k_jk e^{cum_ex[t]−cum[j]}.
+        # Factored form e^{cum_ex[t]} · e^{−cum[j]}; the second factor is
+        # clipped — it only saturates where the true coefficient underflows.
+        att = jnp.einsum("bchk,bjhk->bhcj",
+                         r_t * jnp.exp(cum_ex),
+                         k_t * jnp.exp(jnp.clip(-cum, None, 60.0)))
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), -1)
+        att = jnp.where(tri[None, None], att, 0.0)
+        y += jnp.einsum("bhcj,bjhv->bchv", att, v_t)
+        # bonus diagonal term
+        y += jnp.einsum("bchk,bchk,bchv->bchv", r_t, u[None, None] * k_t, v_t)
+        # state update: S_out = e^{cum[-1]} S_in + Σ_j e^{cum[-1]−cum[j]} k_j v_j^T
+        # (cum[-1]−cum[j] ≤ 0 ⇒ exact, no overflow)
+        s_out = s_in * jnp.exp(cum[:, -1])[..., None] \
+            + jnp.einsum("bjhk,bjhv->bhkv", k_t * jnp.exp(cum[:, -1:] - cum), v_t)
+        return s_out, y
+
+    s_last, ys = jax.lax.scan(body, s0.astype(jnp.float32),
+                              (rc.astype(jnp.float32), kc.astype(jnp.float32),
+                               vc.astype(jnp.float32), wc.astype(jnp.float32)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+    return y, s_last
+
+
+def time_mix(cfg: ModelConfig, params: dict, x: jax.Array, shift_state: jax.Array,
+             wkv_state: jax.Array, backend: str = "auto"):
+    """x: (B,S,D); shift_state: (B,D) last token of previous chunk;
+    wkv_state: (B,H,Dh,Dh) fp32. Returns (out, shift', wkv')."""
+    rk = cfg.rwkv
+    b, s, d = x.shape
+    h, dh = d // rk.head_size, rk.head_size
+    x_prev = jnp.concatenate([shift_state[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+    mixed = _ddlerp(params, x, x_prev, rk.tokenshift_lora_rank)
+    r = (mixed["r"] @ params["w_r"].astype(x.dtype)).reshape(b, s, h, dh)
+    k = (mixed["k"] @ params["w_k"].astype(x.dtype)).reshape(b, s, h, dh)
+    v = (mixed["v"] @ params["w_v"].astype(x.dtype)).reshape(b, s, h, dh)
+    g = jax.nn.silu(mixed["g"] @ params["w_g"].astype(x.dtype))
+    dec = params["decay_base"].astype(jnp.float32) + \
+        (jnp.tanh(mixed["w"] @ params["decay_w1"].astype(x.dtype)).astype(jnp.float32)
+         @ params["decay_w2"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(dec)).reshape(b, s, h, dh)               # (0,1)
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    if backend == "pallas":
+        from repro.kernels.rwkv6_scan import ops as _ops
+        y, wkv_state = _ops.wkv6(rf, kf, vf, w, params["bonus_u"], wkv_state)
+    elif s >= 128 and s % 64 == 0:
+        y, wkv_state = wkv_scan_chunked(rf, kf, vf, w, params["bonus_u"], wkv_state)
+    else:
+        y, wkv_state = wkv_scan_ref(rf, kf, vf, w, params["bonus_u"], wkv_state)
+    # per-head groupnorm
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = y * params["ln_y_scale"].astype(x.dtype) + params["ln_y_bias"].astype(x.dtype)
+    out = (y * g) @ params["w_o"].astype(x.dtype)
+    return out, x[:, -1], wkv_state
+
+
+def channel_mix(cfg: ModelConfig, params: dict, x: jax.Array, shift_state: jax.Array):
+    """Finch channel mix: relu²(k)·W_v gated by receptance."""
+    x_prev = jnp.concatenate([shift_state[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+    xx = x_prev - x
+    x_k = x + xx * params["cm_mix_k"].astype(x.dtype)
+    x_r = x + xx * params["cm_mix_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(x_k @ params["cm_k"].astype(x.dtype)))
+    kv = k @ params["cm_v"].astype(x.dtype)
+    out = jax.nn.sigmoid(x_r @ params["cm_r"].astype(x.dtype)) * kv
+    return out, x[:, -1]

@@ -1,0 +1,4 @@
+from repro.serving.engine import RealServingEngine, ServingReport, SimServingEngine  # noqa: F401
+from repro.serving.kvstore import TieredKVStore  # noqa: F401
+from repro.serving.request import Phase, Request  # noqa: F401
+from repro.serving.workloads import WORKLOADS, fixed_length, generate  # noqa: F401

@@ -1,0 +1,93 @@
+"""Tiered KV store: HBM / host DRAM / remote, with bandwidth + capacity model.
+
+On a real v5e fleet the tiers are per-chip HBM (819 GB/s), host DRAM over
+DMA, and a remote disaggregated store over DCN (the paper's 10–80 Gbps
+regime).  Here the store tracks placement, enforces capacities with LRU
+spill, and reports the channel bandwidth restoration I/O sees for a given
+request — which is what the CacheFlow cost model and simulator consume.
+
+Placement is per *request* payload (KV bytes + boundary activations), the
+granularity the paper's storage tier operates at.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+TIER_ORDER = ("hbm", "host", "remote")
+
+
+@dataclass
+class Tier:
+    name: str
+    bandwidth: float               # bytes/s toward HBM
+    capacity: float                # bytes
+    used: float = 0.0
+    lru: "OrderedDict[str, int]" = field(default_factory=OrderedDict)
+
+
+class TieredKVStore:
+    def __init__(self, *, hbm_bw: float = 819e9, hbm_cap: float = 4e9,
+                 host_bw: float = 100e9, host_cap: float = 200e9,
+                 remote_bw: float = 10e9 / 8, remote_cap: float = 100e12,
+                 io_channels: int = 1):
+        self.tiers: Dict[str, Tier] = {
+            "hbm": Tier("hbm", hbm_bw, hbm_cap),
+            "host": Tier("host", host_bw, host_cap),
+            "remote": Tier("remote", remote_bw, remote_cap),
+        }
+        self.io_channels = io_channels
+        self.placement: Dict[str, str] = {}   # rid -> tier name
+
+    # ------------------------------------------------------------------
+    def put(self, rid: str, nbytes: int, tier: str = "host"):
+        """Store a request's KV payload, spilling LRU entries downward."""
+        self._evict_for(tier, nbytes)
+        t = self.tiers[tier]
+        t.lru[rid] = nbytes
+        t.used += nbytes
+        self.placement[rid] = tier
+
+    def _evict_for(self, tier: str, nbytes: int):
+        t = self.tiers[tier]
+        order = list(TIER_ORDER)
+        below = order[order.index(tier) + 1] if tier != "remote" else None
+        while t.used + nbytes > t.capacity and t.lru:
+            victim, vbytes = t.lru.popitem(last=False)
+            t.used -= vbytes
+            if below is not None:
+                self.put(victim, vbytes, below)
+            else:
+                self.placement.pop(victim, None)
+
+    def touch(self, rid: str):
+        tier = self.placement.get(rid)
+        if tier:
+            t = self.tiers[tier]
+            if rid in t.lru:
+                t.lru.move_to_end(rid)
+
+    def tier_of(self, rid: str) -> Optional[str]:
+        return self.placement.get(rid)
+
+    def bandwidth_for(self, rid: str) -> float:
+        """Channel bandwidth restoration I/O sees for this request's payload."""
+        tier = self.placement.get(rid, "remote")
+        return self.tiers[tier].bandwidth
+
+    def promote(self, rid: str, to: str = "host"):
+        tier = self.placement.get(rid)
+        if tier is None or TIER_ORDER.index(tier) <= TIER_ORDER.index(to):
+            return
+        t = self.tiers[tier]
+        nbytes = t.lru.pop(rid)
+        t.used -= nbytes
+        self.put(rid, nbytes, to)
+
+    def evict(self, rid: str):
+        tier = self.placement.pop(rid, None)
+        if tier:
+            t = self.tiers[tier]
+            nbytes = t.lru.pop(rid, 0)
+            t.used -= nbytes

@@ -1,0 +1,27 @@
+"""TTFT / utilization metrics."""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List
+
+import numpy as np
+
+
+def percentiles(values: Iterable[float], ps=(50, 90, 99)) -> Dict[str, float]:
+    arr = np.asarray(sorted(values), np.float64)
+    if arr.size == 0:
+        return {f"p{p}": float("nan") for p in ps} | {"mean": float("nan")}
+    out = {f"p{p}": float(np.percentile(arr, p)) for p in ps}
+    out["mean"] = float(arr.mean())
+    return out
+
+
+def cdf(values: Iterable[float], n_points: int = 50) -> List[tuple]:
+    arr = np.asarray(sorted(values), np.float64)
+    if arr.size == 0:
+        return []
+    qs = np.linspace(0, 100, n_points)
+    return [(float(np.percentile(arr, q)), q / 100.0) for q in qs]
+
+
+def speedup(baseline: Dict[str, float], ours: Dict[str, float], key: str = "mean") -> float:
+    return baseline[key] / max(ours[key], 1e-12)

@@ -1,0 +1,4 @@
+from repro.training.checkpoint import CheckpointManager  # noqa: F401
+from repro.training.data import DataConfig, batch_at, embedding_batch_at  # noqa: F401
+from repro.training.optimizer import AdamWConfig, OptState, adamw_update, init_opt_state  # noqa: F401
+from repro.training.train_step import lm_loss, make_eval_step, make_train_step  # noqa: F401

@@ -1,0 +1,65 @@
+"""Int8 error-feedback gradient compression for cross-pod (DCN) all-reduce.
+
+Multi-pod training reduces gradients over the slow "pod" axis.  We compress
+to int8 with per-block scales before the collective and keep the
+quantisation residual locally (error feedback), which preserves convergence
+(Karimireddy et al., 2019).  On the wire this turns the pod-axis fp32
+all-reduce into an int8 all-gather + local sum — 4× fewer DCN bytes, visible
+in the dry-run HLO.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 1024
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-block symmetric int8. x: flat fp32 (padded to BLOCK)."""
+    blocks = x.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).reshape(-1)
+
+
+def compress_decompress(x: jax.Array, residual: Optional[jax.Array] = None):
+    """Local quantise→dequantise round trip with error feedback.
+    Returns (x_hat, new_residual)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    if residual is not None:
+        flat = flat + residual.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    padded = jnp.pad(flat, (0, pad))
+    q, s = _quantize(padded)
+    xh = _dequantize(q, s)[:n]
+    return xh.reshape(x.shape).astype(x.dtype), (flat - xh).reshape(x.shape)
+
+
+def error_feedback_psum(x: jax.Array, axis_name: str,
+                        residual: Optional[jax.Array] = None):
+    """Compressed mean over ``axis_name`` (use inside shard_map):
+    int8 all-gather + local dequantised sum. Returns (mean, new_residual)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    if residual is not None:
+        flat = flat + residual.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    padded = jnp.pad(flat, (0, pad))
+    q, s = _quantize(padded)
+    # int8 payload over the slow axis; scales are fp32 but 1/BLOCK the size
+    q_all = jax.lax.all_gather(q, axis_name)           # (P, nblk, BLOCK) int8
+    s_all = jax.lax.all_gather(s, axis_name)
+    summed = jnp.sum(q_all.astype(jnp.float32) * s_all, axis=0)
+    world = q_all.shape[0]
+    mean = summed.reshape(-1)[:n] / world
+    local_hat = _dequantize(q, s)[:n]
+    new_residual = (flat[:n] - local_hat).reshape(x.shape)
+    return mean.reshape(x.shape).astype(x.dtype), new_residual

@@ -1,0 +1,59 @@
+"""Deterministic sharded synthetic data pipeline.
+
+Stateless addressing: batch(step, host) is a pure function of (seed, step,
+host), so a restarted host resumes at the exact global batch index with zero
+coordination — the data-side half of the fault-tolerance story.  Production
+would swap in grain/ArrayRecord readers behind the same interface.
+
+The token stream is Zipf-ish random text plus a learnable periodic pattern so
+training loss demonstrably decreases within a few hundred steps.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    num_hosts: int = 1
+    host_id: int = 0
+    seed: int = 0
+
+    @property
+    def local_batch(self) -> int:
+        assert self.global_batch % self.num_hosts == 0
+        return self.global_batch // self.num_hosts
+
+
+def batch_at(cfg: DataConfig, step: int) -> dict:
+    """Returns {"tokens": (local_batch, seq+1) int32} — model input is
+    tokens[:, :-1], labels tokens[:, 1:]."""
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    key = jax.random.fold_in(key, cfg.host_id)
+    b, s = cfg.local_batch, cfg.seq_len + 1
+    base = jax.random.randint(key, (b, s), 0, cfg.vocab_size, dtype=jnp.int32)
+    # learnable structure: arithmetic token sequences with random phase
+    phase = jax.random.randint(jax.random.fold_in(key, 1), (b, 1), 0, cfg.vocab_size,
+                               dtype=jnp.int32)
+    pattern = (phase + jnp.arange(s, dtype=jnp.int32)[None]) % cfg.vocab_size
+    use_pattern = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.7, (b, 1))
+    tokens = jnp.where(use_pattern, pattern, base)
+    return {"tokens": tokens}
+
+
+def embedding_batch_at(cfg: DataConfig, step: int, d_model: int) -> dict:
+    """For embeddings-input archs (vlm/audio stubs): precomputed frame/patch
+    embeddings + token labels."""
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 7), step)
+    key = jax.random.fold_in(key, cfg.host_id)
+    b, s = cfg.local_batch, cfg.seq_len
+    emb = jax.random.normal(key, (b, s, d_model), jnp.float32) * 0.1
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (b, s), 0,
+                                cfg.vocab_size, dtype=jnp.int32)
+    return {"embeddings": emb, "labels": labels}

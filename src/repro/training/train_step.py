@@ -1,0 +1,74 @@
+"""Train-step factory: LM cross-entropy + AdamW, remat-aware, MoE-aux-aware."""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.training.optimizer import AdamWConfig, OptState, adamw_update
+
+
+def lm_loss(model: Model, params, batch: dict):
+    """Next-token cross entropy (fp32 log-softmax; vocab stays sharded)."""
+    if "tokens" in batch:
+        tokens = batch["tokens"]
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    else:
+        inputs, labels = batch["embeddings"], batch["labels"]
+    logits, aux = model.forward(params, inputs)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    return nll + aux, {"nll": nll, "aux": aux}
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    loss_fn: Optional[Callable] = None, grad_accum: int = 1):
+    """grad_accum > 1 scans microbatches (leading batch dim split), keeping
+    per-microbatch activation liveness bounded — the memory knob that lets
+    100B+ archs train at global_batch=256×4k on 16 GB chips."""
+    loss_fn = loss_fn or lm_loss
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch), has_aux=True)(params)
+
+    def train_step(params, opt_state: OptState, batch: dict):
+        if grad_accum <= 1:
+            (loss, extras), grads = grads_of(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda a: a.reshape(grad_accum, a.shape[0] // grad_accum,
+                                    *a.shape[1:]), batch)
+
+            def body(carry, mb):
+                acc, loss_acc, aux_acc = carry
+                (loss, extras), g = grads_of(params, mb)
+                acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return (acc, loss_acc + loss, aux_acc + extras["aux"]), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, loss_sum, aux_sum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+                micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = loss_sum / grad_accum
+            extras = {"nll": loss - aux_sum / grad_accum, "aux": aux_sum / grad_accum}
+        params, opt_state, om = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, **extras, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model, loss_fn: Optional[Callable] = None):
+    loss_fn = loss_fn or lm_loss
+
+    def eval_step(params, batch: dict):
+        loss, extras = loss_fn(model, params, batch)
+        return {"loss": loss, **extras}
+
+    return eval_step

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# tests run against the source tree; smoke tests must see 1 device
+# (the 512-device override belongs ONLY to launch/dryrun.py)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

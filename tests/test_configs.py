@@ -1,0 +1,74 @@
+"""Config registry + parameter accounting tests."""
+import pytest
+
+from repro.config import SHAPES, supports_shape
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, get_config
+
+# published sizes (±5%)
+EXPECTED_TOTAL = {
+    "phi4-mini-3.8b": 3.8e9,
+    "mistral-large-123b": 123e9,
+    "qwen1.5-0.5b": 0.46e9,
+    "qwen1.5-110b": 111e9,
+    "pixtral-12b": 12.2e9,
+    "deepseek-v2-236b": 236e9,
+    "deepseek-moe-16b": 16.4e9,
+    "recurrentgemma-2b": 2.7e9,
+    "rwkv6-7b": 7.5e9,
+    "qwen3-8b": 8.2e9,
+    "llama3.1-8b": 8.0e9,
+    "qwen3-30b-a3b": 30.5e9,
+}
+EXPECTED_ACTIVE = {
+    "deepseek-v2-236b": 21e9,
+    "deepseek-moe-16b": 2.8e9,
+    "qwen3-30b-a3b": 3.3e9,
+}
+
+
+def test_registry_has_ten_assigned():
+    assert len(ASSIGNED_ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_config_loads(arch):
+    cfg = get_config(arch)
+    assert cfg.num_layers > 0 and cfg.d_model > 0
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED_TOTAL))
+def test_param_counts_match_published(arch):
+    pc = get_config(arch).param_counts()
+    exp = EXPECTED_TOTAL[arch]
+    assert abs(pc["total"] - exp) / exp < 0.08, (pc["total"], exp)
+    if arch in EXPECTED_ACTIVE:
+        expa = EXPECTED_ACTIVE[arch]
+        assert abs(pc["active"] - expa) / expa < 0.12
+
+
+def test_long_context_support_matrix():
+    subq = {a for a in ALL_ARCHS if get_config(a).sub_quadratic}
+    assert subq == {"recurrentgemma-2b", "rwkv6-7b"}
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        assert supports_shape(cfg, SHAPES["train_4k"])
+        assert supports_shape(cfg, SHAPES["decode_32k"])
+        assert supports_shape(cfg, SHAPES["long_500k"]) == cfg.sub_quadratic
+
+
+def test_kv_bytes_per_token():
+    # MLA cache must be dramatically smaller than an equivalent MHA cache
+    ds = get_config("deepseek-v2-236b")
+    assert ds.kv_bytes_per_token() == 60 * (512 + 64) * 2
+    # attention-free: no KV
+    assert get_config("rwkv6-7b").kv_bytes_per_token() == 0
+    # hybrid: only the 1-in-3 attention layers hold KV
+    rg = get_config("recurrentgemma-2b")
+    assert rg.kv_bytes_per_token() == len(rg.attention_layers) * 2 * 1 * 256 * 2
+
+
+def test_reduced_configs_are_small():
+    for arch in ALL_ARCHS:
+        r = get_config(arch).reduced()
+        assert r.d_model <= 256 and r.num_layers <= 6
+        assert r.family == get_config(arch).family

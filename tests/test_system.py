@@ -1,0 +1,83 @@
+"""End-to-end behaviour tests for the CacheFlow system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import HARDWARE, IO_BANDWIDTHS
+from repro.configs import get_config
+from repro.core import CostModel, RestorationSimulator, SimRequest
+from repro.core.baselines import plans_and_kwargs
+from repro.core.profiler import profile_analytic
+from repro.launch.train import run as train_run
+
+
+def test_harmonic_bound_is_optimal_envelope():
+    """Eq. 1: T* = Tc·Tio/(Tc+Tio) and the simulator's single-request
+    two-pointer finish time approaches it (within chunk granularity)."""
+    cfg = get_config("qwen3-8b")
+    cost = CostModel(cfg, HARDWARE["h100"], IO_BANDWIDTHS["10Gbps"], mfu=0.45)
+    n = 24_000
+    plans, kw = plans_and_kwargs("cake", "r", n, chunk_size=256,
+                                 l_delta=0, num_layers=cfg.num_layers)
+    sim = RestorationSimulator(cost, stages=1, io_channels=1, **kw)
+    res = sim.run([SimRequest("r", n, 0.0, plans)])
+    t_sim = res.restore_finish["r"]
+    t_star = cost.harmonic_bound(n)
+    assert t_star * 0.9 <= t_sim <= t_star * 1.6, (t_sim, t_star)
+    assert t_sim <= min(cost.t_comp(n), cost.t_io_tokens(n)) * 1.05
+
+
+def test_stage_scaling_near_linear():
+    """Eq. 2: S stages give ~S× restoration speedup."""
+    cfg = get_config("qwen3-8b")
+    cost = CostModel(cfg, HARDWARE["h100"], IO_BANDWIDTHS["10Gbps"], mfu=0.45)
+    n = 24_000
+    times = {}
+    for s in (1, 2, 4):
+        plans, kw = plans_and_kwargs("cacheflow", "r", n, chunk_size=256,
+                                     l_delta=0, num_layers=cfg.num_layers,
+                                     stage_bounds=[(i * cfg.num_layers // s,
+                                                    (i + 1) * cfg.num_layers // s)
+                                                   for i in range(s)])
+        sim = RestorationSimulator(cost, stages=s, io_channels=s, **kw)
+        times[s] = sim.run([SimRequest("r", n, 0.0, plans)]).restore_finish["r"]
+    assert times[1] / times[2] > 1.6
+    assert times[1] / times[4] > 2.8
+
+
+def test_l_delta_crossover_exists():
+    """Fig. 3: layer-wise wins short prefixes, token-wise wins long ones."""
+    cfg = get_config("qwen3-8b")
+    cost = CostModel(cfg, HARDWARE["h100"], IO_BANDWIDTHS["40Gbps"], mfu=0.45)
+    prof = profile_analytic(cost, lengths=[128, 512, 2048, 8192, 32768])
+    assert prof.t_layer[0] <= prof.t_token[0] * 1.05       # short: layer wins
+    assert prof.t_token[-1] <= prof.t_layer[-1] * 1.05     # long: token wins
+    assert 128 <= prof.l_delta <= 32768
+
+
+def test_straggler_channel_failure_recovers():
+    """A failed I/O channel mid-restoration must not lose work or hang —
+    transfers re-queue (idempotent restoration)."""
+    cfg = get_config("qwen3-8b")
+    cost = CostModel(cfg, HARDWARE["h100"], IO_BANDWIDTHS["10Gbps"], mfu=0.45)
+    n = 16_000
+    plans, kw = plans_and_kwargs("cacheflow", "r", n, chunk_size=256,
+                                 l_delta=0, num_layers=cfg.num_layers)
+    sim = RestorationSimulator(cost, stages=1, io_channels=2,
+                               channel_fail_at={1: 0.05}, **kw)
+    res = sim.run([SimRequest("r", n, 0.0, plans)])
+    assert "r" in res.restore_finish          # completed despite the failure
+    plans2, kw2 = plans_and_kwargs("cacheflow", "r", n, chunk_size=256,
+                                   l_delta=0, num_layers=cfg.num_layers)
+    sim2 = RestorationSimulator(cost, stages=1, io_channels=2, **kw2)
+    res2 = sim2.run([SimRequest("r", n, 0.0, plans2)])
+    assert res.restore_finish["r"] >= res2.restore_finish["r"]  # failure costs time
+
+
+def test_train_driver_end_to_end_with_failure(tmp_path):
+    """launch/train.py: loss decreases and an injected host failure restarts
+    from the checkpoint manifest."""
+    last = train_run("qwen1.5-0.5b", reduced=True, steps=24,
+                     ckpt_dir=str(tmp_path), global_batch=4, seq_len=32,
+                     ckpt_every=8, fail_at_step=10)
+    assert last == 23
