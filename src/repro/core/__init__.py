@@ -4,7 +4,9 @@
   plans      — token-/layer-wise two-pointer claim machines
   scheduler  — batch-aware 3D scheduler (Algorithm 1)
   boundary   — boundary-activation store (3rd dimension, §3.2)
-  simulator  — discrete-event engine (batched contention, stragglers, Fig. 5)
+  engine_core— backend-agnostic batched event loop (admission, resources,
+               I/O channels, failures, KV-store tiers) with Sim/Real backends
+  simulator  — discrete-event facade over the engine core (Fig. 5)
   executor   — real-JAX restoration with bit-exact verification
   baselines  — vLLM / LMCache / SGLang / Cake comparators
   profiler   — offline L_Δ crossover profiling (Fig. 3)
@@ -13,5 +15,8 @@ from repro.core.cost_model import CostModel  # noqa: F401
 from repro.core.plans import RequestPlan, TwoPointerPlan, make_request_plans  # noqa: F401
 from repro.core.scheduler import BatchScheduler, ScheduledOp  # noqa: F401
 from repro.core.boundary import BoundaryStore, StoredRequest, stage_bounds  # noqa: F401
+from repro.core.engine_core import (EngineBackend, EngineCore, EngineRequest,  # noqa: F401
+                                    EngineResult, RealBackend, SimBackend,
+                                    interleaving_dur_fn)
 from repro.core.simulator import RestorationSimulator, SimRequest, SimResult  # noqa: F401
 from repro.core.executor import RestorationExecutor  # noqa: F401

@@ -1,0 +1,394 @@
+"""Backend-agnostic batched restoration engine core.
+
+One event loop drives the paper's ``BatchScheduler`` (Algorithm 1) over a
+batch of concurrent requests.  The loop owns every scheduling concern:
+
+  * continuous-batching admission (``max_active``),
+  * one compute resource per pipeline stage (chunk recomputes serialize on
+    the stage's chips),
+  * ``io_channels`` shared transfer channels (contention = queueing, §3.3),
+  * per-channel slowdown / failure injection (failed transfers release their
+    claim and are rescheduled — restoration ops are idempotent),
+  * ``TieredKVStore`` integration: per-request bandwidth lookup at dispatch
+    time, LRU ``touch`` on admission and ``promote`` on restore completion.
+
+What an op *costs* — virtual seconds from a ``CostModel`` or measured wall
+seconds of real JAX execution — is delegated to a pluggable backend:
+
+  * ``SimBackend``  — advances virtual time analytically; the discrete-event
+    simulator (``RestorationSimulator``) is a thin facade over it.
+  * ``RealBackend`` — executes each dispatched op on device through a
+    ``RestorationExecutor`` and feeds measured (or synthetic, for
+    interleaving tests) durations back into the same loop.
+
+Because both backends run the *identical* admission/dispatch logic, the
+simulator measures exactly the schedule whose correctness the real backend
+proves — including multi-request interleavings.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cost_model import CostModel
+from repro.core.plans import RequestPlan
+from repro.core.scheduler import BatchScheduler, ScheduledOp
+
+
+@dataclass
+class EngineRequest:
+    """A request as the engine core sees it: identity, prefix length,
+    arrival time, and one RequestPlan per pipeline stage."""
+    request_id: str
+    n_tokens: int                   # prefix to restore
+    arrival: float = 0.0
+    plans: List[RequestPlan] = None # one per stage
+
+
+@dataclass
+class EngineResult:
+    restore_finish: Dict[str, float]
+    restore_start: Dict[str, float]
+    makespan: float
+    compute_busy: float             # fraction of makespan, averaged over stages
+    io_busy: float                  # fraction, averaged over channels
+    ops_log: List[Tuple[float, float, str, str]]  # (start, end, resource, op-desc)
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+
+class EngineBackend:
+    """Execution provider for the engine core.
+
+    ``compute_secs`` / ``io_secs`` return the op's duration on the engine
+    clock; a real backend additionally *executes* the op when asked for its
+    duration (dispatch time), which is legal because claimed units are
+    disjoint and per-plan claims serialize."""
+
+    def admit(self, req: EngineRequest) -> None:
+        """Called once when the request enters the active batch."""
+
+    def compute_secs(self, op: ScheduledOp, req: EngineRequest) -> float:
+        raise NotImplementedError
+
+    def io_secs(self, op: ScheduledOp, req: EngineRequest,
+                bandwidth: Optional[float]) -> float:
+        raise NotImplementedError
+
+    def io_benefit(self, plan: RequestPlan, unit: int,
+                   bandwidth: Optional[float]) -> bool:
+        """Marginal-benefit gate (§3.3); default = eager loading."""
+        return True
+
+    def request_done(self, req: EngineRequest) -> None:
+        """Called once when every stage plan of the request is done."""
+
+
+class SimBackend(EngineBackend):
+    """Analytic durations from the CacheFlow cost model (virtual time)."""
+
+    def __init__(self, cost: CostModel,
+                 bw_override: Optional[Dict[str, float]] = None,
+                 benefit_gate: bool = True):
+        self.cost = cost
+        self.bw_override = bw_override or {}
+        self.benefit_gate = benefit_gate
+
+    def _bw(self, rid: str, bandwidth: Optional[float]) -> float:
+        if bandwidth is not None:
+            return bandwidth
+        return self.bw_override.get(rid, self.cost.io_bandwidth)
+
+    def compute_secs(self, op: ScheduledOp, req: EngineRequest) -> float:
+        lo, hi = op.layers
+        frac = (hi - lo) / self.cost.cfg.num_layers
+        t0, t1 = op.tokens
+        f = self.cost.flops_recompute(t0, t1) * frac
+        return f / (self.cost.hw.peak_flops * self.cost.mfu * self.cost.num_chips) \
+            + self.cost.hw.kernel_overhead_s
+
+    def io_secs(self, op: ScheduledOp, req: EngineRequest,
+                bandwidth: Optional[float]) -> float:
+        t0, t1 = op.tokens
+        lo, hi = op.layers
+        frac = (hi - lo) / self.cost.cfg.num_layers
+        bytes_ = (t1 - t0) * self.cost.bytes_per_token() * frac
+        return bytes_ / self._bw(op.request_id, bandwidth)
+
+    def io_benefit(self, plan: RequestPlan, unit: int,
+                   bandwidth: Optional[float]) -> bool:
+        """Spend a channel on this unit only if the transfer finishes before
+        compute alone could have covered the remaining span through it —
+        otherwise loading delays completion (the channel pins the unit)."""
+        if not self.benefit_gate:
+            return True
+        if not plan.plan.comp_enabled:
+            return True               # load-only baselines: I/O is all they have
+        tokens, layers = plan.io_unit_for_claim(unit)
+        lo, hi = layers
+        frac = (hi - lo) / self.cost.cfg.num_layers
+        bw = self._bw(plan.request_id, bandwidth)
+        t0, t1 = tokens
+        io_secs = (t1 - t0) * self.cost.bytes_per_token() * frac / bw
+        if plan.strategy == "token":
+            span0 = plan.plan.comp_next * plan.chunk_size
+            span1 = min(plan.n_tokens, (unit + 1) * plan.chunk_size)
+            n_chunks = unit - plan.plan.comp_next + 1
+            comp_secs = (self.cost.flops_recompute(span0, span1) * frac
+                         / (self.cost.hw.peak_flops * self.cost.mfu
+                            * self.cost.num_chips)
+                         + n_chunks * self.cost.hw.kernel_overhead_s)
+        else:
+            n_layers = unit - plan.plan.comp_next + 1
+            full = self.cost.flops_recompute(0, plan.n_tokens) / self.cost.cfg.num_layers
+            comp_secs = (full * n_layers
+                         / (self.cost.hw.peak_flops * self.cost.mfu
+                            * self.cost.num_chips)
+                         + self.cost.hw.kernel_overhead_s)
+        return io_secs < comp_secs
+
+
+class RealBackend(EngineBackend):
+    """Executes dispatched ops on device through a RestorationExecutor.
+
+    Durations on the engine clock are measured wall seconds by default;
+    ``dur_fn(op) -> secs`` overrides them (e.g. rng-drawn durations to
+    property-test that *any* legal multi-request interleaving restores every
+    cache correctly — the completion order, and hence all subsequent claims,
+    follows the durations)."""
+
+    def __init__(self, executor, *, dur_fn: Optional[Callable[[ScheduledOp], float]] = None,
+                 verify: bool = False):
+        self.executor = executor
+        self.dur_fn = dur_fn
+        self.verify = verify
+
+    def admit(self, req: EngineRequest) -> None:
+        self.executor.begin_restore(req.request_id, plans=req.plans)
+
+    def _run_op(self, op: ScheduledOp) -> float:
+        if self.dur_fn is not None:
+            # synthetic schedule durations: no measurement needed, so let op
+            # results chain asynchronously instead of syncing the whole cache
+            self.executor.execute_op(op)
+            return max(1e-12, float(self.dur_fn(op)))
+        import jax
+        t0 = time.perf_counter()
+        self.executor.execute_op(op)
+        jax.block_until_ready(
+            jax.tree.leaves(self.executor.live_cache(op.request_id)))
+        return max(1e-12, time.perf_counter() - t0)
+
+    def compute_secs(self, op: ScheduledOp, req: EngineRequest) -> float:
+        return self._run_op(op)
+
+    def io_secs(self, op: ScheduledOp, req: EngineRequest,
+                bandwidth: Optional[float]) -> float:
+        return self._run_op(op)
+
+    def request_done(self, req: EngineRequest) -> None:
+        self.executor.finalize_restore(req.request_id)
+        if self.verify:
+            self.executor.verify(req.request_id)
+
+
+# ---------------------------------------------------------------------------
+# Event loop
+# ---------------------------------------------------------------------------
+
+
+class EngineCore:
+    """The single scheduling loop shared by simulated and real serving.
+
+    stage_parallel=False models the paper's Fig. 7 ablation: stages restore
+    sequentially (stage s waits for s-1) instead of concurrently via boundary
+    activations.  max_active is the continuous-batching admission cap
+    (0 = unlimited).  kvstore, when given, supplies per-request I/O bandwidth
+    at dispatch time and gets ``touch``/``promote`` callbacks as requests are
+    admitted / finish restoring."""
+
+    def __init__(self, backend: EngineBackend, *, stages: int = 1,
+                 io_channels: int = 1, io_policy: str = "longest_remaining",
+                 channel_slowdown: Optional[Dict[int, float]] = None,
+                 channel_fail_at: Optional[Dict[int, float]] = None,
+                 stage_parallel: bool = True, max_active: int = 0,
+                 kvstore=None, promote_tier: str = "host",
+                 strict: bool = False):
+        self.backend = backend
+        self.stages = stages
+        self.io_channels = io_channels
+        self.io_policy = io_policy
+        self.slow = channel_slowdown or {}
+        self.fail_at = channel_fail_at or {}
+        self.stage_parallel = stage_parallel
+        self.max_active = max_active
+        self.kvstore = kvstore
+        self.promote_tier = promote_tier
+        self.strict = strict
+
+    def _bandwidth(self, rid: str) -> Optional[float]:
+        if self.kvstore is None:
+            return None
+        return self.kvstore.bandwidth_for(rid)
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[EngineRequest]) -> EngineResult:
+        sched = BatchScheduler(
+            io_policy=self.io_policy,
+            benefit_fn=lambda p, u: self.backend.io_benefit(
+                p, u, self._bandwidth(p.request_id)))
+        counter = itertools.count()
+        events: List[Tuple[float, int, str, object]] = []
+        for r in requests:
+            heapq.heappush(events, (r.arrival, next(counter), "arrive", r))
+        for c, t in self.fail_at.items():
+            heapq.heappush(events, (t, next(counter), "fail", c))
+
+        comp_free = {s: True for s in range(self.stages)}
+        io_free = {c: True for c in range(self.io_channels)}
+        failed = set()
+        busy_comp = {s: 0.0 for s in range(self.stages)}
+        busy_io = {c: 0.0 for c in range(self.io_channels)}
+        restore_finish: Dict[str, float] = {}
+        restore_start: Dict[str, float] = {}
+        ops_log: List[Tuple[float, float, str, str]] = []
+        reqs: Dict[str, EngineRequest] = {}
+        pending: List[EngineRequest] = []
+        active: set = set()
+        now = 0.0
+
+        def stage_unblocked(op_stage: int, rid: str) -> bool:
+            if self.stage_parallel:
+                return True
+            # sequential ablation: stage s may start only after stage s-1 done
+            for s in range(op_stage):
+                p = sched.plans.get((rid, s))
+                if p is not None and not p.plan.done:
+                    return False
+            return True
+
+        def dispatch():
+            # compute per stage
+            for s in range(self.stages):
+                while comp_free[s]:
+                    op = sched.next_compute(stage=s)
+                    if op is None:
+                        break
+                    if not stage_unblocked(op.stage, op.request_id):
+                        # release the claim; retry when upstream finishes
+                        sched.plans[(op.request_id, op.stage)].plan.comp_inflight = None
+                        break
+                    r = reqs[op.request_id]
+                    restore_start.setdefault(op.request_id, now)
+                    dur = self.backend.compute_secs(op, r)
+                    comp_free[s] = False
+                    busy_comp[s] += dur
+                    ops_log.append((now, now + dur, f"comp{s}",
+                                    f"{op.request_id}:c{op.unit}"))
+                    heapq.heappush(events, (now + dur, next(counter), "comp_done", (s, op)))
+            # shared I/O channels
+            for c in range(self.io_channels):
+                while io_free[c] and c not in failed:
+                    op = sched.next_io()
+                    if op is None:
+                        break
+                    if not stage_unblocked(op.stage, op.request_id):
+                        sched.plans[(op.request_id, op.stage)].plan.io_inflight = None
+                        break
+                    r = reqs[op.request_id]
+                    restore_start.setdefault(op.request_id, now)
+                    dur = self.backend.io_secs(op, r, self._bandwidth(op.request_id)) \
+                        * self.slow.get(c, 1.0)
+                    io_free[c] = False
+                    busy_io[c] += dur
+                    ops_log.append((now, now + dur, f"io{c}",
+                                    f"{op.request_id}:l{op.unit}"))
+                    heapq.heappush(events, (now + dur, next(counter), "io_done", (c, op)))
+
+        def admit(r: EngineRequest):
+            reqs[r.request_id] = r
+            active.add(r.request_id)
+            sched.add_request(r.plans)
+            self.backend.admit(r)
+            if self.kvstore is not None:
+                self.kvstore.touch(r.request_id)
+
+        while events:
+            now, _, kind, payload = heapq.heappop(events)
+            if kind == "arrive":
+                r: EngineRequest = payload
+                if self.max_active and len(active) >= self.max_active:
+                    pending.append(r)
+                else:
+                    admit(r)
+            elif kind == "comp_done":
+                s, op = payload
+                comp_free[s] = True
+                sched.complete(op)
+            elif kind == "io_done":
+                c, op = payload
+                io_free[c] = True
+                if c in failed:
+                    # transfer was aborted: release the claim, it reschedules
+                    p = sched.plans[(op.request_id, op.stage)]
+                    p.plan.io_inflight = None
+                else:
+                    sched.complete(op)
+            elif kind == "fail":
+                failed.add(payload)
+            # request completions (+ admit queued requests)
+            for rid in list(active):
+                if rid not in restore_finish and sched.request_done(rid):
+                    restore_finish[rid] = now
+                    active.discard(rid)
+                    self.backend.request_done(reqs[rid])
+                    if self.kvstore is not None:
+                        # restored KV is hot again: refresh LRU + pull it up
+                        self.kvstore.touch(rid)
+                        self.kvstore.promote(rid, self.promote_tier)
+                    while pending and (not self.max_active
+                                       or len(active) < self.max_active):
+                        admit(pending.pop(0))
+            dispatch()
+
+        if self.strict and (pending or active):
+            unfinished = sorted(active) + [r.request_id for r in pending]
+            raise RuntimeError(
+                f"engine core stalled before completion: {unfinished}")
+
+        makespan = max(restore_finish.values(), default=0.0) or 1e-12
+        return EngineResult(
+            restore_finish=restore_finish,
+            restore_start=restore_start,
+            makespan=makespan,
+            compute_busy=sum(busy_comp.values()) / (max(1, self.stages) * makespan),
+            io_busy=sum(busy_io.values()) / (max(1, self.io_channels) * makespan),
+            ops_log=ops_log,
+        )
+
+
+def interleaving_dur_fn(op_order: str,
+                        rng: Optional[np.random.Generator] = None
+                        ) -> Optional[Callable[[ScheduledOp], float]]:
+    """Map the executor's historical ``op_order`` knob onto schedule
+    durations for a RealBackend: the engine clock orders completions by
+    duration, so biasing one op kind fast makes that pointer race ahead.
+    Returns None for "measured" (use real wall timings)."""
+    if op_order == "measured":
+        return None
+    rng = rng or np.random.default_rng(0)
+    if op_order == "io_first":
+        return lambda op: 1e-6 if op.kind == "load" else 1.0
+    if op_order == "compute_first":
+        return lambda op: 1e-6 if op.kind == "compute" else 1.0
+    if op_order in ("random", "alternate"):
+        return lambda op: float(rng.uniform(0.5, 1.5))
+    raise ValueError(f"unknown op_order: {op_order}")

@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.core.boundary import BoundaryStore, StoredRequest, stage_bounds
 from repro.core.plans import RequestPlan, make_request_plans
-from repro.core.scheduler import BatchScheduler, ScheduledOp
+from repro.core.scheduler import ScheduledOp
 from repro.models.model import Model
 
 ATTN_FIELDS = ("k", "v", "ckv")
@@ -74,11 +74,17 @@ class RestorationExecutor:
     # ------------------------------------------------------------------
     # Restoration
     # ------------------------------------------------------------------
-    def begin_restore(self, rid: str):
+    def begin_restore(self, rid: str, plans: Optional[List[RequestPlan]] = None):
         req = self.store.get(rid)
         m = self.model
         cache = m.init_cache(1, req.n_tokens, dtype=m.compute_dtype)
         self._live[rid] = {"cache": cache, "act": {}, "req": req}
+        if plans is not None:
+            self._live[rid]["plans"] = {p.stage: p for p in plans}
+
+    def live_cache(self, rid: str):
+        """The in-flight (or final) restored cache of a live restoration."""
+        return self._live[rid]["cache"]
 
     def make_plans(self, rid: str, *, l_delta: int, strategy: Optional[str] = None
                    ) -> List[RequestPlan]:
@@ -141,7 +147,6 @@ class RestorationExecutor:
         t0, t1 = op.tokens
         lo, hi = op.layers
         plan = _plan_of(live, op)
-        kinds = cfg.layer_kinds()
         slots = self.model.slots
         for i in range(lo, hi):
             kind, slot = slots[i]
@@ -176,43 +181,21 @@ class RestorationExecutor:
                 op_order: str = "alternate", rng: Optional[np.random.Generator] = None):
         """Run a full restoration for one request; returns the live cache.
 
-        op_order: "alternate" | "io_first" | "compute_first" | "random" —
-        correctness must hold for ANY legal interleaving (property-tested).
+        Convenience wrapper: drives the shared engine core with a RealBackend
+        over a single-request batch.  op_order: "alternate" | "io_first" |
+        "compute_first" | "random" | "measured" — mapped onto schedule
+        durations (see ``interleaving_dur_fn``); correctness must hold for
+        ANY legal interleaving (property-tested).
         """
-        self.begin_restore(rid)
+        from repro.core.engine_core import (EngineCore, EngineRequest,
+                                            RealBackend, interleaving_dur_fn)
         if plans is None:
             plans = self.make_plans(rid, l_delta=l_delta, strategy=strategy)
-        self._live[rid]["plans"] = {p.stage: p for p in plans}
-        sched = BatchScheduler(io_policy=io_policy)
-        sched.add_request(plans)
-        rng = rng or np.random.default_rng(0)
-        while not sched.all_done():
-            ops: List[ScheduledOp] = []
-            if op_order == "io_first":
-                order = ["load", "compute"]
-            elif op_order == "compute_first":
-                order = ["compute", "load"]
-            elif op_order == "random":
-                order = list(rng.permutation(["load", "compute"]))
-            else:
-                order = ["load", "compute"] if rng.random() < 0.5 else ["compute", "load"]
-            for what in order:
-                if what == "load":
-                    op = sched.next_io()
-                else:
-                    op = None
-                    for s in sched.stages():
-                        op = sched.next_compute(stage=s)
-                        if op:
-                            break
-                if op is not None:
-                    ops.append(op)
-            if not ops:
-                raise RuntimeError("scheduler stalled before completion")
-            for op in ops:
-                self.execute_op(op)
-                sched.complete(op)
-        self.finalize_restore(rid)
+        backend = RealBackend(self, dur_fn=interleaving_dur_fn(op_order, rng))
+        core = EngineCore(backend, stages=max(p.stage for p in plans) + 1,
+                          io_channels=1, io_policy=io_policy, strict=True)
+        req = self.store.get(rid)
+        core.run([EngineRequest(rid, req.n_tokens, 0.0, plans)])
         return self._live[rid]["cache"]
 
     def finalize_restore(self, rid: str):
@@ -226,7 +209,6 @@ class RestorationExecutor:
         live = self._live[rid]
         req: StoredRequest = live["req"]
         cache = live["cache"]
-        kinds = cfg.layer_kinds()
         for stage, plan in live["plans"].items():
             if plan.strategy != "token" or plan.plan.io_done == 0:
                 continue

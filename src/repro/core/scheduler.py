@@ -43,30 +43,44 @@ class BatchScheduler:
     benefit_fn: object = None      # Callable[[RequestPlan, int], bool]
     plans: Dict[Tuple[str, int], RequestPlan] = field(default_factory=dict)
     arrival_order: List[str] = field(default_factory=list)
+    # O(1) indexes so dispatch stays near O(B log B) at large batch sizes:
+    # arrival sequence number per request (sort key), plans bucketed by
+    # stage (compute dispatch) and by request (request_done).
+    arrival_index: Dict[str, int] = field(default_factory=dict)
+    _by_stage: Dict[int, "Dict[str, RequestPlan]"] = field(default_factory=dict)
+    _by_rid: Dict[str, List[RequestPlan]] = field(default_factory=dict)
+    _arrival_seq: int = 0
     _rr_io: int = 0
     _rr_comp: Dict[int, int] = field(default_factory=dict)
 
     # ------------------------------------------------------------------
     def add_request(self, plans: List[RequestPlan]):
         rid = plans[0].request_id
-        if rid not in self.arrival_order:
+        if rid not in self.arrival_index:
             self.arrival_order.append(rid)
+            self.arrival_index[rid] = self._arrival_seq
+            self._arrival_seq += 1
+        self._by_rid[rid] = list(plans)
         for p in plans:
             self.plans[(rid, p.stage)] = p
+            self._by_stage.setdefault(p.stage, {})[rid] = p
 
     def remove_request(self, rid: str):
         self.arrival_order = [r for r in self.arrival_order if r != rid]
-        self.plans = {k: v for k, v in self.plans.items() if k[0] != rid}
+        self.arrival_index.pop(rid, None)
+        for p in self._by_rid.pop(rid, []):
+            self.plans.pop((rid, p.stage), None)
+            self._by_stage.get(p.stage, {}).pop(rid, None)
 
     # ------------------------------------------------------------------
     def _stage_plans(self, stage: int) -> List[RequestPlan]:
-        return [p for (rid, s), p in self.plans.items() if s == stage]
+        return list(self._by_stage.get(stage, {}).values())
 
     def stages(self) -> List[int]:
-        return sorted({s for (_, s) in self.plans})
+        return sorted(s for s, d in self._by_stage.items() if d)
 
     def request_done(self, rid: str) -> bool:
-        ps = [p for (r, _), p in self.plans.items() if r == rid]
+        ps = self._by_rid.get(rid, ())
         return bool(ps) and all(p.plan.done for p in ps)
 
     def all_done(self) -> bool:
@@ -98,12 +112,12 @@ class BatchScheduler:
                          if not self.request_done(r)), None)
             cands.sort(key=lambda p: (p.request_id != head,
                                       -p.remaining_io_tokens(),
-                                      self.arrival_order.index(p.request_id)))
+                                      self.arrival_index[p.request_id]))
         elif self.io_policy == "shortest_remaining":
             cands.sort(key=lambda p: (p.remaining_io_tokens(),
-                                      self.arrival_order.index(p.request_id)))
+                                      self.arrival_index[p.request_id]))
         elif self.io_policy == "fifo":
-            cands.sort(key=lambda p: self.arrival_order.index(p.request_id))
+            cands.sort(key=lambda p: self.arrival_index[p.request_id])
         elif self.io_policy == "round_robin":
             self._rr_io += 1
             cands = cands[self._rr_io % len(cands):] + cands[:self._rr_io % len(cands)]
@@ -131,7 +145,7 @@ class BatchScheduler:
                  and p.plan.comp_next <= p.plan.io_next]
         if not plans:
             return None
-        plans.sort(key=lambda p: self.arrival_order.index(p.request_id))
+        plans.sort(key=lambda p: self.arrival_index[p.request_id])
         if self.compute_policy == "round_robin":
             start = self._rr_comp.get(stage, 0) % len(plans)
             p = plans[start]

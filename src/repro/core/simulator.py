@@ -1,45 +1,28 @@
 """Discrete-event simulator for batched, multi-stage KV restoration.
 
-Executes the *real* BatchScheduler (Algorithm 1) against a timing model:
-  * one compute resource per pipeline stage (chunk recomputes serialize on
-    the stage's chips — GPU/TPU kernels are exclusive),
-  * ``io_channels`` shared transfer channels (contention = queueing, which is
-    how concurrent loads slow each other down, paper §3.3),
-  * optional per-channel slowdown / failure injection for straggler and
-    fault-tolerance studies (failed transfers release their claim and are
-    rescheduled — restoration ops are idempotent).
+Thin facade over the shared :mod:`repro.core.engine_core` event loop with a
+``SimBackend``: the *same* admission/dispatch logic that drives real JAX
+execution is driven here against the analytic cost model, so per-request
+restore-finish times and resource busy fractions (the paper's Fig. 5
+utilization numbers) are measured for exactly the schedule the real backend
+proves correct.
 
-Outputs per-request restore-finish times and resource busy fractions (the
-paper's Fig. 5 utilization numbers).
+Straggler/failure studies plug in via ``channel_slowdown`` /
+``channel_fail_at``; tier-aware bandwidth via ``bw_override`` (static) or a
+``kvstore`` (dispatch-time lookup + LRU touch/promote).
 """
 from __future__ import annotations
 
-import heapq
-import itertools
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 from repro.core.cost_model import CostModel
-from repro.core.plans import RequestPlan
-from repro.core.scheduler import BatchScheduler, ScheduledOp
+from repro.core.engine_core import (EngineCore, EngineRequest, EngineResult,
+                                    SimBackend)
 
-
-@dataclass
-class SimRequest:
-    request_id: str
-    n_tokens: int                   # prefix to restore
-    arrival: float = 0.0
-    plans: List[RequestPlan] = None # one per stage
-
-
-@dataclass
-class SimResult:
-    restore_finish: Dict[str, float]
-    restore_start: Dict[str, float]
-    makespan: float
-    compute_busy: float             # fraction of makespan, averaged over stages
-    io_busy: float                  # fraction, averaged over channels
-    ops_log: List[Tuple[float, float, str, str]]  # (start, end, resource, op-desc)
+# Historical names: simulation call sites construct SimRequest/SimResult,
+# which are literally the engine core's request/result types.
+SimRequest = EngineRequest
+SimResult = EngineResult
 
 
 class RestorationSimulator:
@@ -49,7 +32,7 @@ class RestorationSimulator:
                  channel_fail_at: Optional[Dict[int, float]] = None,
                  stage_parallel: bool = True,
                  bw_override: Optional[Dict[str, float]] = None,
-                 max_active: int = 0):
+                 max_active: int = 0, kvstore=None):
         """stage_parallel=False models the paper's Fig. 7 ablation: stages
         restore sequentially (stage s waits for s-1) instead of concurrently
         via boundary activations.
@@ -58,180 +41,12 @@ class RestorationSimulator:
         the payload lives in.  max_active: continuous-batching admission cap
         (0 = unlimited)."""
         self.cost = cost
-        self.stages = stages
-        self.io_channels = io_channels
-        self.io_policy = io_policy
-        self.slow = channel_slowdown or {}
-        self.fail_at = channel_fail_at or {}
-        self.stage_parallel = stage_parallel
-        self.bw_override = bw_override or {}
-        self.max_active = max_active
+        self.backend = SimBackend(cost, bw_override=bw_override)
+        self.core = EngineCore(
+            self.backend, stages=stages, io_channels=io_channels,
+            io_policy=io_policy, channel_slowdown=channel_slowdown,
+            channel_fail_at=channel_fail_at, stage_parallel=stage_parallel,
+            max_active=max_active, kvstore=kvstore)
 
-    # -- durations -------------------------------------------------------
-    def _compute_secs(self, op: ScheduledOp, n_tokens: int) -> float:
-        lo, hi = op.layers
-        frac = (hi - lo) / self.cost.cfg.num_layers
-        t0, t1 = op.tokens
-        f = self.cost.flops_recompute(t0, t1) * frac
-        return f / (self.cost.hw.peak_flops * self.cost.mfu * self.cost.num_chips) \
-            + self.cost.hw.kernel_overhead_s
-
-    def _io_secs(self, op: ScheduledOp, channel: int) -> float:
-        t0, t1 = op.tokens
-        lo, hi = op.layers
-        frac = (hi - lo) / self.cost.cfg.num_layers
-        bytes_ = (t1 - t0) * self.cost.bytes_per_token() * frac
-        bw = self.bw_override.get(op.request_id, self.cost.io_bandwidth)
-        return bytes_ / bw * self.slow.get(channel, 1.0)
-
-    # -- marginal-benefit gate (§3.3) --------------------------------------
-    def _io_benefit(self, plan: RequestPlan, unit: int) -> bool:
-        """Spend a channel on this unit only if the transfer finishes before
-        compute alone could have covered the remaining span through it —
-        otherwise loading delays completion (the channel pins the unit)."""
-        if not plan.plan.comp_enabled:
-            return True               # load-only baselines: I/O is all they have
-        tokens, layers = plan.io_unit_for_claim(unit)
-        lo, hi = layers
-        frac = (hi - lo) / self.cost.cfg.num_layers
-        bw = self.bw_override.get(plan.request_id, self.cost.io_bandwidth)
-        t0, t1 = tokens
-        io_secs = (t1 - t0) * self.cost.bytes_per_token() * frac / bw
-        if plan.strategy == "token":
-            span0 = plan.plan.comp_next * plan.chunk_size
-            span1 = min(plan.n_tokens, (unit + 1) * plan.chunk_size)
-            n_chunks = unit - plan.plan.comp_next + 1
-            comp_secs = (self.cost.flops_recompute(span0, span1) * frac
-                         / (self.cost.hw.peak_flops * self.cost.mfu
-                            * self.cost.num_chips)
-                         + n_chunks * self.cost.hw.kernel_overhead_s)
-        else:
-            n_layers = unit - plan.plan.comp_next + 1
-            full = self.cost.flops_recompute(0, plan.n_tokens) / self.cost.cfg.num_layers
-            comp_secs = (full * n_layers
-                         / (self.cost.hw.peak_flops * self.cost.mfu
-                            * self.cost.num_chips)
-                         + self.cost.hw.kernel_overhead_s)
-        return io_secs < comp_secs
-
-    # -- main loop --------------------------------------------------------
     def run(self, requests: List[SimRequest]) -> SimResult:
-        sched = BatchScheduler(io_policy=self.io_policy,
-                               benefit_fn=self._io_benefit)
-        counter = itertools.count()
-        events: List[Tuple[float, int, str, object]] = []
-        for r in requests:
-            heapq.heappush(events, (r.arrival, next(counter), "arrive", r))
-
-        comp_free = {s: True for s in range(self.stages)}
-        io_free = {c: True for c in range(self.io_channels)}
-        failed = set()
-        busy_comp = {s: 0.0 for s in range(self.stages)}
-        busy_io = {c: 0.0 for c in range(self.io_channels)}
-        restore_finish: Dict[str, float] = {}
-        restore_start: Dict[str, float] = {}
-        ops_log: List[Tuple[float, float, str, str]] = []
-        reqs: Dict[str, SimRequest] = {}
-        now = 0.0
-        for c, t in self.fail_at.items():
-            heapq.heappush(events, (t, next(counter), "fail", c))
-
-        def stage_unblocked(op_stage: int, rid: str) -> bool:
-            if self.stage_parallel:
-                return True
-            # sequential ablation: stage s may start only after stage s-1 done
-            for s in range(op_stage):
-                p = sched.plans.get((rid, s))
-                if p is not None and not p.plan.done:
-                    return False
-            return True
-
-        def dispatch():
-            # compute per stage
-            for s in range(self.stages):
-                while comp_free[s]:
-                    op = sched.next_compute(stage=s)
-                    if op is None:
-                        break
-                    if not stage_unblocked(op.stage, op.request_id):
-                        # release the claim; retry when upstream finishes
-                        sched.plans[(op.request_id, op.stage)].plan.comp_inflight = None
-                        break
-                    r = reqs[op.request_id]
-                    restore_start.setdefault(op.request_id, now)
-                    dur = self._compute_secs(op, r.n_tokens)
-                    comp_free[s] = False
-                    busy_comp[s] += dur
-                    ops_log.append((now, now + dur, f"comp{s}",
-                                    f"{op.request_id}:c{op.unit}"))
-                    heapq.heappush(events, (now + dur, next(counter), "comp_done", (s, op)))
-            # shared I/O channels
-            for c in range(self.io_channels):
-                while io_free[c] and c not in failed:
-                    op = None
-                    for s in range(self.stages):
-                        op = sched.next_io(stage=None)
-                        break
-                    if op is None:
-                        break
-                    if not stage_unblocked(op.stage, op.request_id):
-                        sched.plans[(op.request_id, op.stage)].plan.io_inflight = None
-                        break
-                    restore_start.setdefault(op.request_id, now)
-                    dur = self._io_secs(op, c)
-                    io_free[c] = False
-                    busy_io[c] += dur
-                    ops_log.append((now, now + dur, f"io{c}",
-                                    f"{op.request_id}:l{op.unit}"))
-                    heapq.heappush(events, (now + dur, next(counter), "io_done", (c, op)))
-
-        pending: List[SimRequest] = []
-        active: set = set()
-
-        def admit(r: SimRequest):
-            reqs[r.request_id] = r
-            active.add(r.request_id)
-            sched.add_request(r.plans)
-
-        while events:
-            now, _, kind, payload = heapq.heappop(events)
-            if kind == "arrive":
-                r: SimRequest = payload
-                if self.max_active and len(active) >= self.max_active:
-                    pending.append(r)
-                else:
-                    admit(r)
-            elif kind == "comp_done":
-                s, op = payload
-                comp_free[s] = True
-                sched.complete(op)
-            elif kind == "io_done":
-                c, op = payload
-                io_free[c] = True
-                if c in failed:
-                    # transfer was aborted: release the claim, it reschedules
-                    p = sched.plans[(op.request_id, op.stage)]
-                    p.plan.io_inflight = None
-                else:
-                    sched.complete(op)
-            elif kind == "fail":
-                failed.add(payload)
-            # request completions (+ admit queued requests)
-            for rid in list(active):
-                if rid not in restore_finish and sched.request_done(rid):
-                    restore_finish[rid] = now
-                    active.discard(rid)
-                    while pending and (not self.max_active
-                                       or len(active) < self.max_active):
-                        admit(pending.pop(0))
-            dispatch()
-
-        makespan = max(restore_finish.values(), default=0.0) or 1e-12
-        return SimResult(
-            restore_finish=restore_finish,
-            restore_start=restore_start,
-            makespan=makespan,
-            compute_busy=sum(busy_comp.values()) / (self.stages * makespan),
-            io_busy=sum(busy_io.values()) / (self.io_channels * makespan),
-            ops_log=ops_log,
-        )
+        return self.core.run(requests)

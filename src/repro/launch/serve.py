@@ -34,6 +34,7 @@ def main():
     ap.add_argument("--hardware", default="tpu_v5e", choices=list(HARDWARE))
     ap.add_argument("--stages", type=int, default=2)
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--io-channels", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--real", action="store_true", help="run a reduced model for real")
     args = ap.parse_args()
@@ -43,12 +44,16 @@ def main():
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
         eng = RealServingEngine(model, params, system=args.system,
-                                stages=min(args.stages, 2), chunk_size=16)
+                                stages=min(args.stages, 2), chunk_size=16,
+                                max_batch=args.max_batch,
+                                io_channels=args.io_channels)
         reqs = [Request(f"r{i}", 0.0, prefix_len=64 + 32 * i, new_len=16)
                 for i in range(args.requests)]
         rep = eng.serve(reqs)
         print(json.dumps({"system": args.system, "mode": "real",
-                          "ttft": rep.stats}, indent=1))
+                          "ttft": rep.stats,
+                          "compute_busy": round(rep.compute_busy, 3),
+                          "io_busy": round(rep.io_busy, 3)}, indent=1))
         return
 
     cfg = get_config(args.arch)
@@ -57,7 +62,8 @@ def main():
     eng = SimServingEngine(cfg, HARDWARE[args.hardware],
                            io_bandwidth=IO_BANDWIDTHS[args.bandwidth],
                            system=args.system, stages=args.stages,
-                           max_batch=args.max_batch, kvstore=store)
+                           max_batch=args.max_batch, kvstore=store,
+                           io_channels=args.io_channels)
     rep = eng.run(reqs)
     print(json.dumps({
         "system": args.system, "workload": args.workload,

@@ -1,6 +1,8 @@
 """Property tests (hypothesis) on the paper's scheduling invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.cost_model import CostModel
 from repro.core.plans import TwoPointerPlan, make_request_plans
@@ -17,6 +19,7 @@ CFG = ModelConfig(name="t", family="dense", num_layers=8, d_model=256,
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.property
 @settings(max_examples=200, deadline=None)
 @given(n=st.integers(1, 40), seed=st.integers(0, 2**31 - 1),
        io_on=st.booleans(), comp_on=st.booleans())
@@ -46,6 +49,7 @@ def test_two_pointer_exact_coverage(n, seed, io_on, comp_on):
     assert plan.comp_done + plan.io_done == n
 
 
+@pytest.mark.property
 @settings(max_examples=100, deadline=None)
 @given(n=st.integers(1, 30), seed=st.integers(0, 2**31 - 1))
 def test_inflight_units_never_collide(n, seed):
@@ -69,6 +73,7 @@ def test_inflight_units_never_collide(n, seed):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.property
 @settings(max_examples=50, deadline=None)
 @given(lengths=st.lists(st.integers(100, 30_000), min_size=1, max_size=6),
        seed=st.integers(0, 2**31 - 1),
@@ -125,6 +130,7 @@ def test_longest_remaining_priority():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.property
 @settings(max_examples=50, deadline=None)
 @given(n=st.integers(1_000, 40_000), bw_gbps=st.floats(1.0, 100.0),
        mfu=st.floats(0.2, 0.9))
@@ -142,6 +148,7 @@ def test_token_split_beats_static_splits(n, bw_gbps, mfu):
     assert cost.harmonic_bound(n) <= min(cost.t_comp(n), cost.t_io_tokens(n)) + 1e-9
 
 
+@pytest.mark.property
 @settings(max_examples=30, deadline=None)
 @given(n=st.integers(2_000, 40_000), stages=st.integers(1, 8))
 def test_stage_parallel_linear_speedup(n, stages):
@@ -151,6 +158,7 @@ def test_stage_parallel_linear_speedup(n, stages):
     np.testing.assert_allclose(ts, t1 / stages, rtol=1e-9)  # Eq. 2
 
 
+@pytest.mark.property
 @settings(max_examples=30, deadline=None)
 @given(bw=st.floats(1.0, 200.0), mfu=st.floats(0.2, 0.9))
 def test_l_delta_crossover_is_stable(bw, mfu):

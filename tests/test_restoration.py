@@ -5,7 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.core import RestorationExecutor
@@ -50,6 +51,7 @@ def test_stage_parallel_restoration(arch, stages):
     ex.verify("req")
 
 
+@pytest.mark.property
 @settings(max_examples=8, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1),
        order=st.sampled_from(["random", "io_first", "compute_first"]))
