@@ -8,6 +8,8 @@
                I/O channels, failures, KV-store tiers) with Sim/Real backends
   simulator  — discrete-event facade over the engine core (Fig. 5)
   executor   — real-JAX restoration with bit-exact verification
+  trace      — schedule capture (ScheduleTrace) + deterministic replay
+               (ReplayBackend) sim↔real
   baselines  — vLLM / LMCache / SGLang / Cake comparators
   profiler   — offline L_Δ crossover profiling (Fig. 3)
 """
@@ -20,3 +22,5 @@ from repro.core.engine_core import (EngineBackend, EngineCore, EngineRequest,  #
                                     interleaving_dur_fn)
 from repro.core.simulator import RestorationSimulator, SimRequest, SimResult  # noqa: F401
 from repro.core.executor import RestorationExecutor  # noqa: F401
+from repro.core.trace import (ReplayBackend, ReplayDivergence, ScheduleTrace,  # noqa: F401
+                              TraceEvent, TraceRecorder, capture, replay_trace)

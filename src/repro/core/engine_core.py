@@ -47,7 +47,7 @@ class EngineRequest:
     request_id: str
     n_tokens: int                   # prefix to restore
     arrival: float = 0.0
-    plans: List[RequestPlan] = None # one per stage
+    plans: List[RequestPlan] = field(default_factory=list)  # one per stage
 
 
 @dataclass
@@ -240,11 +240,29 @@ class EngineCore:
         return self.kvstore.bandwidth_for(rid)
 
     # ------------------------------------------------------------------
-    def run(self, requests: List[EngineRequest]) -> EngineResult:
-        sched = BatchScheduler(
-            io_policy=self.io_policy,
-            benefit_fn=lambda p, u: self.backend.io_benefit(
-                p, u, self._bandwidth(p.request_id)))
+    def run(self, requests: List[EngineRequest],
+            trace: Optional["TraceRecorder"] = None) -> EngineResult:
+        """Drive the batch to completion.  ``trace``, when given, is a
+        ``repro.core.trace.TraceRecorder`` that captures every scheduling
+        decision as a replayable ``ScheduleTrace``."""
+        empty = [r.request_id for r in requests if not r.plans]
+        if empty:
+            if self.strict:
+                raise ValueError(
+                    f"requests with zero plans cannot be scheduled: {empty}")
+            requests = [r for r in requests if r.plans]
+
+        now = 0.0
+
+        def benefit(p: RequestPlan, u: int) -> bool:
+            ok = self.backend.io_benefit(p, u, self._bandwidth(p.request_id))
+            if trace is not None:
+                trace.record_gate(now, p.request_id, p.stage, u, ok)
+            return ok
+
+        sched = BatchScheduler(io_policy=self.io_policy, benefit_fn=benefit)
+        if trace is not None:
+            trace.begin(self._trace_meta(), requests)
         counter = itertools.count()
         events: List[Tuple[float, int, str, object]] = []
         for r in requests:
@@ -263,7 +281,6 @@ class EngineCore:
         reqs: Dict[str, EngineRequest] = {}
         pending: List[EngineRequest] = []
         active: set = set()
-        now = 0.0
 
         def stage_unblocked(op_stage: int, rid: str) -> bool:
             if self.stage_parallel:
@@ -276,16 +293,20 @@ class EngineCore:
             return True
 
         def dispatch():
-            # compute per stage
+            # compute per stage.  A stage-blocked head request (sequential
+            # ablation) is SKIPPED, not a reason to stop: other requests'
+            # runnable ops on this stage must still dispatch.
             for s in range(self.stages):
+                blocked: set = set()
                 while comp_free[s]:
-                    op = sched.next_compute(stage=s)
+                    op = sched.next_compute(stage=s, skip=blocked)
                     if op is None:
                         break
                     if not stage_unblocked(op.stage, op.request_id):
                         # release the claim; retry when upstream finishes
                         sched.plans[(op.request_id, op.stage)].plan.comp_inflight = None
-                        break
+                        blocked.add((op.request_id, op.stage))
+                        continue
                     r = reqs[op.request_id]
                     restore_start.setdefault(op.request_id, now)
                     dur = self.backend.compute_secs(op, r)
@@ -293,24 +314,31 @@ class EngineCore:
                     busy_comp[s] += dur
                     ops_log.append((now, now + dur, f"comp{s}",
                                     f"{op.request_id}:c{op.unit}"))
+                    if trace is not None:
+                        trace.record_dispatch(now, f"comp{s}", op, dur, None)
                     heapq.heappush(events, (now + dur, next(counter), "comp_done", (s, op)))
-            # shared I/O channels
+            # shared I/O channels (stage blockage is channel-independent, so
+            # one skip set covers the whole pass)
+            io_blocked: set = set()
             for c in range(self.io_channels):
                 while io_free[c] and c not in failed:
-                    op = sched.next_io()
+                    op = sched.next_io(skip=io_blocked)
                     if op is None:
                         break
                     if not stage_unblocked(op.stage, op.request_id):
                         sched.plans[(op.request_id, op.stage)].plan.io_inflight = None
-                        break
+                        io_blocked.add((op.request_id, op.stage))
+                        continue
                     r = reqs[op.request_id]
+                    bw = self._bandwidth(op.request_id)
+                    dur = self.backend.io_secs(op, r, bw) * self.slow.get(c, 1.0)
                     restore_start.setdefault(op.request_id, now)
-                    dur = self.backend.io_secs(op, r, self._bandwidth(op.request_id)) \
-                        * self.slow.get(c, 1.0)
                     io_free[c] = False
                     busy_io[c] += dur
                     ops_log.append((now, now + dur, f"io{c}",
                                     f"{op.request_id}:l{op.unit}"))
+                    if trace is not None:
+                        trace.record_dispatch(now, f"io{c}", op, dur, bw)
                     heapq.heappush(events, (now + dur, next(counter), "io_done", (c, op)))
 
         def admit(r: EngineRequest):
@@ -318,6 +346,8 @@ class EngineCore:
             active.add(r.request_id)
             sched.add_request(r.plans)
             self.backend.admit(r)
+            if trace is not None:
+                trace.record_admit(now, r.request_id)
             if self.kvstore is not None:
                 self.kvstore.touch(r.request_id)
 
@@ -333,6 +363,8 @@ class EngineCore:
                 s, op = payload
                 comp_free[s] = True
                 sched.complete(op)
+                if trace is not None:
+                    trace.record_complete(now, f"comp{s}", op)
             elif kind == "io_done":
                 c, op = payload
                 io_free[c] = True
@@ -340,16 +372,24 @@ class EngineCore:
                     # transfer was aborted: release the claim, it reschedules
                     p = sched.plans[(op.request_id, op.stage)]
                     p.plan.io_inflight = None
+                    if trace is not None:
+                        trace.record_abort(now, f"io{c}", op)
                 else:
                     sched.complete(op)
+                    if trace is not None:
+                        trace.record_complete(now, f"io{c}", op)
             elif kind == "fail":
                 failed.add(payload)
+                if trace is not None:
+                    trace.record_fail(now, payload)
             # request completions (+ admit queued requests)
             for rid in list(active):
                 if rid not in restore_finish and sched.request_done(rid):
                     restore_finish[rid] = now
                     active.discard(rid)
                     self.backend.request_done(reqs[rid])
+                    if trace is not None:
+                        trace.record_done(now, rid)
                     if self.kvstore is not None:
                         # restored KV is hot again: refresh LRU + pull it up
                         self.kvstore.touch(rid)
@@ -365,7 +405,7 @@ class EngineCore:
                 f"engine core stalled before completion: {unfinished}")
 
         makespan = max(restore_finish.values(), default=0.0) or 1e-12
-        return EngineResult(
+        result = EngineResult(
             restore_finish=restore_finish,
             restore_start=restore_start,
             makespan=makespan,
@@ -373,6 +413,25 @@ class EngineCore:
             io_busy=sum(busy_io.values()) / (max(1, self.io_channels) * makespan),
             ops_log=ops_log,
         )
+        if trace is not None:
+            trace.finish(result)
+        return result
+
+    def _trace_meta(self) -> dict:
+        """Engine configuration a replay needs to rebuild this core.
+        ``channel_slowdown`` is recorded for provenance only — replayed
+        durations already include it."""
+        return {
+            "backend": type(self.backend).__name__,
+            "stages": self.stages,
+            "io_channels": self.io_channels,
+            "io_policy": self.io_policy,
+            "channel_slowdown": dict(self.slow),
+            "channel_fail_at": dict(self.fail_at),
+            "stage_parallel": self.stage_parallel,
+            "max_active": self.max_active,
+            "promote_tier": self.promote_tier,
+        }
 
 
 def interleaving_dur_fn(op_order: str,

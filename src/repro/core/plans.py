@@ -109,7 +109,7 @@ class RequestPlan:
     layer_lo: int
     layer_hi: int
     stage: int = 0
-    plan: TwoPointerPlan = None
+    plan: Optional[TwoPointerPlan] = None
 
     def __post_init__(self):
         if self.plan is None:

@@ -89,9 +89,15 @@ class BatchScheduler:
     # ------------------------------------------------------------------
     # Algorithm 1 line 6: I/O channel assignment
     # ------------------------------------------------------------------
-    def next_io(self, stage: Optional[int] = None) -> Optional[ScheduledOp]:
+    def next_io(self, stage: Optional[int] = None,
+                skip: "frozenset[Tuple[str, int]]" = frozenset()
+                ) -> Optional[ScheduledOp]:
+        """``skip``: (request_id, stage) pairs the caller already found
+        stage-blocked this dispatch round — excluded so their claims are not
+        immediately re-taken."""
         cands = [p for p in self.plans.values()
-                 if (stage is None or p.stage == stage)]
+                 if (stage is None or p.stage == stage)
+                 and (p.request_id, p.stage) not in skip]
         cands = [p for p in cands
                  if p.plan.io_enabled
                  and not p.plan.done and p.plan.io_inflight is None
@@ -138,9 +144,12 @@ class BatchScheduler:
     # ------------------------------------------------------------------
     compute_policy: str = "fifo"
 
-    def next_compute(self, stage: int = 0) -> Optional[ScheduledOp]:
+    def next_compute(self, stage: int = 0,
+                     skip: "frozenset[Tuple[str, int]]" = frozenset()
+                     ) -> Optional[ScheduledOp]:
         plans = [p for p in self._stage_plans(stage)
-                 if p.plan.comp_enabled
+                 if (p.request_id, p.stage) not in skip
+                 and p.plan.comp_enabled
                  and not p.plan.done and p.plan.comp_inflight is None
                  and p.plan.comp_next <= p.plan.io_next]
         if not plans:

@@ -48,5 +48,7 @@ class RestorationSimulator:
             channel_fail_at=channel_fail_at, stage_parallel=stage_parallel,
             max_active=max_active, kvstore=kvstore)
 
-    def run(self, requests: List[SimRequest]) -> SimResult:
-        return self.core.run(requests)
+    def run(self, requests: List[SimRequest], trace=None) -> SimResult:
+        """``trace``: optional ``TraceRecorder`` capturing the schedule for
+        deterministic replay (see :mod:`repro.core.trace`)."""
+        return self.core.run(requests, trace=trace)

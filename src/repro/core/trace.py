@@ -1,0 +1,374 @@
+"""Schedule capture & deterministic replay.
+
+Every engine-core run can be recorded as a :class:`ScheduleTrace` — the
+complete sequence of scheduling decisions the event loop made: admissions,
+marginal-benefit gate answers, dispatches (resource, op, duration,
+bandwidth), completions, aborted transfers, channel failures and request
+completions — plus the engine configuration and the request/plan specs
+needed to rebuild the run from nothing.  Traces round-trip through JSON
+losslessly (floats serialize via ``repr`` and parse back bit-equal).
+
+Replay feeds a captured trace back through the *same* ``EngineCore`` loop
+with a :class:`ReplayBackend` that pins every dispatched op's duration (and
+every gate answer) to the recorded value.  Because the loop is deterministic
+given durations — the event heap breaks ties by push order, the scheduler
+sorts candidates on pure plan state — pinning durations reproduces the
+original interleaving decision-for-decision.  The backend verifies this as
+it goes: any op dispatched out of recorded order raises
+:class:`ReplayDivergence` instead of silently drifting.
+
+Replay is legal on either backend:
+
+  * sim replay (no executor) — pure re-derivation; the resulting
+    ``EngineResult`` must be bit-identical to the captured one.
+  * real replay (``executor=``) — each dispatched op is *executed* on device
+    through a ``RestorationExecutor`` while the engine clock follows the
+    recorded durations.  Restoration ops are idempotent (loads copy ground
+    truth, chunk recomputes are causal and claimed disjointly), so executing
+    them under the captured interleaving — including re-executing transfers
+    a channel failure aborted — restores every cache bit-exactly.
+
+This turns the schedule into a first-class artifact: a production incident
+captured from a ``SimBackend`` (or real) run can be re-executed on the real
+backend to reproduce its exact interleaving.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.engine_core import (EngineBackend, EngineCore, EngineRequest,
+                                    EngineResult)
+from repro.core.plans import RequestPlan
+from repro.core.scheduler import ScheduledOp
+
+TRACE_VERSION = 1
+
+
+class ReplayDivergence(RuntimeError):
+    """Replay dispatched an op (or asked a gate question) that does not match
+    the captured trace — the schedule drifted from the recording."""
+
+
+# ---------------------------------------------------------------------------
+# Serializable trace
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TraceEvent:
+    """One engine-core decision.  ``kind`` ∈ {admit, gate, dispatch,
+    complete, abort, fail, done}; unused fields stay None (and are dropped
+    from the JSON form)."""
+    kind: str
+    t: float
+    resource: Optional[str] = None       # dispatch/complete/abort: comp{s}|io{c}
+    op: Optional[dict] = None            # dispatch/complete/abort
+    duration: Optional[float] = None     # dispatch: pinned engine-clock secs
+    bandwidth: Optional[float] = None    # dispatch (I/O): dispatch-time bytes/s
+    request_id: Optional[str] = None     # admit/done/gate
+    stage: Optional[int] = None          # gate
+    unit: Optional[int] = None           # gate
+    allowed: Optional[bool] = None       # gate
+    channel: Optional[int] = None        # fail
+
+    def to_dict(self) -> dict:
+        return {k: v for k, v in asdict(self).items() if v is not None}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TraceEvent":
+        return cls(**d)
+
+
+def op_to_dict(op: ScheduledOp) -> dict:
+    return {"kind": op.kind, "request_id": op.request_id, "stage": op.stage,
+            "unit": op.unit, "tokens": list(op.tokens),
+            "layers": list(op.layers)}
+
+
+def plan_to_dict(p: RequestPlan) -> dict:
+    return {"request_id": p.request_id, "n_tokens": p.n_tokens,
+            "chunk_size": p.chunk_size, "strategy": p.strategy,
+            "layer_lo": p.layer_lo, "layer_hi": p.layer_hi, "stage": p.stage,
+            "comp_enabled": p.plan.comp_enabled,
+            "io_enabled": p.plan.io_enabled}
+
+
+def plan_from_dict(d: dict) -> RequestPlan:
+    p = RequestPlan(d["request_id"], d["n_tokens"], d["chunk_size"],
+                    d["strategy"], d["layer_lo"], d["layer_hi"],
+                    stage=d["stage"])
+    p.plan.comp_enabled = d["comp_enabled"]
+    p.plan.io_enabled = d["io_enabled"]
+    return p
+
+
+def result_to_dict(res: EngineResult) -> dict:
+    return {"restore_finish": dict(res.restore_finish),
+            "restore_start": dict(res.restore_start),
+            "makespan": res.makespan,
+            "compute_busy": res.compute_busy,
+            "io_busy": res.io_busy,
+            "ops_log": [list(e) for e in res.ops_log]}
+
+
+def result_from_dict(d: dict) -> EngineResult:
+    return EngineResult(
+        restore_finish=dict(d["restore_finish"]),
+        restore_start=dict(d["restore_start"]),
+        makespan=d["makespan"], compute_busy=d["compute_busy"],
+        io_busy=d["io_busy"],
+        ops_log=[tuple(e) for e in d["ops_log"]])
+
+
+@dataclass
+class ScheduleTrace:
+    """A complete, replayable recording of one ``EngineCore.run``."""
+    meta: dict = field(default_factory=dict)       # engine config + backend name
+    requests: List[dict] = field(default_factory=list)
+    events: List[TraceEvent] = field(default_factory=list)
+    result: Optional[dict] = None                  # result_to_dict(EngineResult)
+    version: int = TRACE_VERSION
+
+    # -- views ----------------------------------------------------------
+    def dispatches(self) -> List[TraceEvent]:
+        return [e for e in self.events if e.kind == "dispatch"]
+
+    def gates(self) -> List[TraceEvent]:
+        return [e for e in self.events if e.kind == "gate"]
+
+    def aborts(self) -> List[TraceEvent]:
+        return [e for e in self.events if e.kind == "abort"]
+
+    def captured_result(self) -> Optional[EngineResult]:
+        return result_from_dict(self.result) if self.result else None
+
+    def rebuild_requests(self) -> List[EngineRequest]:
+        """Fresh EngineRequests (pointers at origin) from the recorded specs."""
+        return [EngineRequest(r["request_id"], r["n_tokens"], r["arrival"],
+                              [plan_from_dict(p) for p in r["plans"]])
+                for r in self.requests]
+
+    # -- serialization --------------------------------------------------
+    def to_dict(self) -> dict:
+        return {"version": self.version, "meta": self.meta,
+                "requests": self.requests,
+                "events": [e.to_dict() for e in self.events],
+                "result": self.result}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ScheduleTrace":
+        fail_at = d["meta"].get("channel_fail_at") or {}
+        meta = dict(d["meta"])
+        # JSON stringifies int dict keys; coerce them back
+        meta["channel_fail_at"] = {int(k): v for k, v in fail_at.items()}
+        slow = d["meta"].get("channel_slowdown") or {}
+        meta["channel_slowdown"] = {int(k): v for k, v in slow.items()}
+        return cls(meta=meta, requests=d["requests"],
+                   events=[TraceEvent.from_dict(e) for e in d["events"]],
+                   result=d.get("result"), version=d.get("version", 1))
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ScheduleTrace":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str):
+        with open(path, "w") as f:
+            f.write(self.to_json(indent=1))
+
+    @classmethod
+    def load(cls, path: str) -> "ScheduleTrace":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+# ---------------------------------------------------------------------------
+# Capture
+# ---------------------------------------------------------------------------
+
+
+class TraceRecorder:
+    """Collects engine-core callbacks into a :class:`ScheduleTrace`.
+
+    Pass an instance as ``EngineCore.run(requests, trace=recorder)`` (or via
+    the simulator / serving-engine facades); after the run ``recorder.trace``
+    holds the finished trace."""
+
+    def __init__(self):
+        self.trace: Optional[ScheduleTrace] = None
+
+    def begin(self, meta: dict, requests: List[EngineRequest]):
+        self.trace = ScheduleTrace(
+            meta=meta,
+            requests=[{"request_id": r.request_id, "n_tokens": r.n_tokens,
+                       "arrival": r.arrival,
+                       "plans": [plan_to_dict(p) for p in r.plans]}
+                      for r in requests])
+
+    def _ev(self, **kw):
+        self.trace.events.append(TraceEvent(**kw))
+
+    def record_admit(self, t: float, rid: str):
+        self._ev(kind="admit", t=t, request_id=rid)
+
+    def record_gate(self, t: float, rid: str, stage: int, unit: int,
+                    allowed: bool):
+        self._ev(kind="gate", t=t, request_id=rid, stage=stage, unit=unit,
+                 allowed=allowed)
+
+    def record_dispatch(self, t: float, resource: str, op: ScheduledOp,
+                        duration: float, bandwidth: Optional[float]):
+        self._ev(kind="dispatch", t=t, resource=resource, op=op_to_dict(op),
+                 duration=duration, bandwidth=bandwidth)
+
+    def record_complete(self, t: float, resource: str, op: ScheduledOp):
+        self._ev(kind="complete", t=t, resource=resource, op=op_to_dict(op))
+
+    def record_abort(self, t: float, resource: str, op: ScheduledOp):
+        self._ev(kind="abort", t=t, resource=resource, op=op_to_dict(op))
+
+    def record_fail(self, t: float, channel: int):
+        self._ev(kind="fail", t=t, channel=channel)
+
+    def record_done(self, t: float, rid: str):
+        self._ev(kind="done", t=t, request_id=rid)
+
+    def finish(self, result: EngineResult):
+        self.trace.result = result_to_dict(result)
+
+
+def capture(core: EngineCore, requests: List[EngineRequest]
+            ) -> "tuple[EngineResult, ScheduleTrace]":
+    """Run ``core`` over ``requests`` while recording; returns both the
+    result and the finished trace."""
+    rec = TraceRecorder()
+    res = core.run(requests, trace=rec)
+    return res, rec.trace
+
+
+# ---------------------------------------------------------------------------
+# Replay
+# ---------------------------------------------------------------------------
+
+
+class ReplayBackend(EngineBackend):
+    """Re-executes a captured trace with pinned durations.
+
+    Every ``compute_secs``/``io_secs`` call consumes the next recorded
+    dispatch (validating op identity) and returns its recorded duration;
+    every ``io_benefit`` call consumes the next recorded gate answer.  With
+    an ``executor`` the dispatched ops additionally run on device (real
+    replay); without one the replay is purely analytic (sim replay).
+    """
+
+    def __init__(self, trace: ScheduleTrace, executor=None, *,
+                 verify: bool = False):
+        self.trace = trace
+        self.executor = executor
+        self.verify = verify
+        self._dispatches = trace.dispatches()
+        self._gates = trace.gates()
+        self._di = 0
+        self._gi = 0
+
+    # -- helpers --------------------------------------------------------
+    def _pop_dispatch(self, op: ScheduledOp) -> float:
+        if self._di >= len(self._dispatches):
+            raise ReplayDivergence(
+                f"replay dispatched {op} past the end of the trace "
+                f"({len(self._dispatches)} recorded dispatches)")
+        e = self._dispatches[self._di]
+        self._di += 1
+        rec = e.op
+        got = (op.kind, op.request_id, op.stage, op.unit)
+        want = (rec["kind"], rec["request_id"], rec["stage"], rec["unit"])
+        if got != want:
+            raise ReplayDivergence(
+                f"replay dispatch #{self._di - 1} diverged: engine issued "
+                f"{got}, trace recorded {want}")
+        if self.executor is not None:
+            self.executor.execute_op(op)
+        return e.duration
+
+    # -- EngineBackend --------------------------------------------------
+    def admit(self, req: EngineRequest) -> None:
+        if self.executor is not None:
+            self.executor.begin_restore(req.request_id, plans=req.plans)
+
+    def compute_secs(self, op: ScheduledOp, req: EngineRequest) -> float:
+        return self._pop_dispatch(op)
+
+    def io_secs(self, op: ScheduledOp, req: EngineRequest,
+                bandwidth: Optional[float]) -> float:
+        return self._pop_dispatch(op)
+
+    def io_benefit(self, plan: RequestPlan, unit: int,
+                   bandwidth: Optional[float]) -> bool:
+        if self._gi >= len(self._gates):
+            raise ReplayDivergence(
+                f"replay gate query ({plan.request_id}, stage {plan.stage}, "
+                f"unit {unit}) past the end of the trace")
+        e = self._gates[self._gi]
+        self._gi += 1
+        if (e.request_id, e.stage, e.unit) != (plan.request_id, plan.stage,
+                                               unit):
+            raise ReplayDivergence(
+                f"replay gate #{self._gi - 1} diverged: engine asked about "
+                f"({plan.request_id}, {plan.stage}, {unit}), trace recorded "
+                f"({e.request_id}, {e.stage}, {e.unit})")
+        return e.allowed
+
+    def request_done(self, req: EngineRequest) -> None:
+        if self.executor is not None:
+            self.executor.finalize_restore(req.request_id)
+            if self.verify:
+                self.executor.verify(req.request_id)
+
+    # -- post-run check -------------------------------------------------
+    def assert_exhausted(self):
+        """Every recorded decision must have been replayed."""
+        if self._di != len(self._dispatches):
+            raise ReplayDivergence(
+                f"replay consumed {self._di}/{len(self._dispatches)} "
+                f"recorded dispatches")
+        if self._gi != len(self._gates):
+            raise ReplayDivergence(
+                f"replay consumed {self._gi}/{len(self._gates)} "
+                f"recorded gate answers")
+
+
+def replay_core(trace: ScheduleTrace, backend: EngineBackend,
+                *, strict: bool = True) -> EngineCore:
+    """EngineCore configured exactly as the captured run — except channel
+    slowdowns, which are already folded into the recorded durations, and the
+    KV store, whose bandwidths/gates were recorded at capture time."""
+    m = trace.meta
+    return EngineCore(
+        backend, stages=m["stages"], io_channels=m["io_channels"],
+        io_policy=m["io_policy"],
+        channel_fail_at=dict(m.get("channel_fail_at") or {}),
+        stage_parallel=m["stage_parallel"], max_active=m["max_active"],
+        strict=strict)
+
+
+def replay_trace(trace: ScheduleTrace, executor=None, *, verify: bool = False,
+                 strict: bool = True, trace_out: Optional[TraceRecorder] = None
+                 ) -> EngineResult:
+    """Re-run a captured schedule decision-for-decision.
+
+    Without ``executor``: sim replay; the returned ``EngineResult`` is
+    bit-identical to ``trace.captured_result()``.  With ``executor``: each
+    dispatched op executes on device under the recorded interleaving
+    (``verify=True`` additionally checks every restored cache against its
+    full-prefill ground truth).  Raises :class:`ReplayDivergence` if the
+    re-derived schedule ever departs from the recording.
+    """
+    backend = ReplayBackend(trace, executor, verify=verify)
+    core = replay_core(trace, backend, strict=strict)
+    res = core.run(trace.rebuild_requests(), trace=trace_out)
+    backend.assert_exhausted()
+    return res

@@ -1,0 +1,10 @@
+"""JAX-version compatibility shims for the Pallas TPU kernels.
+
+``pltpu.TPUCompilerParams`` (JAX <= 0.4.x) was renamed to
+``pltpu.CompilerParams`` in newer releases; resolve whichever this
+environment ships so the same ``pallas_call`` works on both.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

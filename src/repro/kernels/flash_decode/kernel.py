@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -95,7 +97,7 @@ def flash_decode(q, k, v, kpos, q_pos, *, scale: float, window: int = 0,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((b, hq, dh), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(scalars, q, k, v, kpos)

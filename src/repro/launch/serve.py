@@ -7,6 +7,16 @@ Simulation at paper scale (default):
 Real execution on a reduced model (CPU):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --real \
       --requests 4 --system cacheflow
+
+Schedule capture & replay (see repro/core/trace.py): ``--trace-out t.json``
+records the restoration schedule of any run; ``--replay t.json`` re-executes
+a captured schedule decision-for-decision with pinned durations —
+analytically by default (bit-identical EngineResult), or on-device with
+``--real`` (every dispatched op runs through a RestorationExecutor and each
+restored cache is verified against full-prefill ground truth under the
+captured interleaving).  On-device replay requires a trace whose geometry
+fits the reduced model — capture it with ``--real --trace-out``; paper-scale
+sim traces replay analytically.
 """
 from __future__ import annotations
 
@@ -18,10 +28,88 @@ import jax
 from repro.config import HARDWARE, IO_BANDWIDTHS
 from repro.configs import get_config
 from repro.core.baselines import BASELINES
+from repro.core.trace import ScheduleTrace, TraceRecorder, replay_trace
 from repro.models import build_model
 from repro.serving import (RealServingEngine, Request, SimServingEngine,
                            TieredKVStore, generate)
 from repro.serving.workloads import WORKLOADS
+
+
+def _save_trace(rec: TraceRecorder, path: str, arch: str = None):
+    if arch is not None:
+        rec.trace.meta["arch"] = arch   # replay sanity check (--real)
+    rec.trace.save(path)
+    print(f"# schedule trace ({len(rec.trace.events)} events) -> {path}")
+
+
+def _replay(args) -> None:
+    trace = ScheduleTrace.load(args.replay)
+    if not trace.requests:
+        raise SystemExit(f"--replay: trace {args.replay} contains no requests")
+    recorder = TraceRecorder() if args.trace_out else None
+    if args.real:
+        # Rebuild a reduced model, re-prefill every captured request so the
+        # executor holds its ground truth, then execute the captured
+        # schedule op-for-op with verification.
+        from repro.core.executor import RestorationExecutor
+        t_arch = trace.meta.get("arch")
+        if t_arch is not None and t_arch != args.arch:
+            raise SystemExit(
+                f"--replay --real: trace was captured on arch '{t_arch}' "
+                f"but --arch is '{args.arch}'; pass --arch {t_arch}")
+        cfg = get_config(args.arch).reduced()
+        # On-device replay needs a trace captured on this reduced-model
+        # geometry (e.g. from `--real --trace-out`): a paper-scale sim
+        # trace references layers this model does not have and prefixes a
+        # CPU prefill cannot reproduce in reasonable time.
+        max_layer = max(p["layer_hi"] for r in trace.requests
+                        for p in r["plans"])
+        max_tokens = max(r["n_tokens"] for r in trace.requests)
+        if max_layer > cfg.num_layers or max_tokens > 4096:
+            raise SystemExit(
+                f"--replay --real: trace geometry (layers<= {max_layer}, "
+                f"prefix<= {max_tokens} tokens) does not fit the reduced "
+                f"'{args.arch}' model ({cfg.num_layers} layers); capture the "
+                f"trace with `--real --trace-out` instead")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        chunks = {p["chunk_size"] for r in trace.requests for p in r["plans"]}
+        if len(chunks) > 1:
+            raise SystemExit(
+                f"--replay --real: heterogeneous chunk sizes {sorted(chunks)} "
+                f"in trace; one executor serves one chunk granularity")
+        ex = RestorationExecutor(model, params, chunk_size=chunks.pop(),
+                                 stages=trace.meta["stages"])
+        rng = jax.random.PRNGKey(args.seed)
+        for r in trace.requests:
+            rng, key = jax.random.split(rng)   # distinct ground truth per rid
+            n = r["n_tokens"]
+            if cfg.input_mode == "tokens":
+                inputs = jax.random.randint(key, (1, n), 0, cfg.vocab_size)
+            else:
+                inputs = jax.random.normal(key, (1, n, cfg.d_model))
+            ex.remember(r["request_id"], inputs)
+        res = replay_trace(trace, ex, verify=True, trace_out=recorder)
+        mode = "replay-real"
+    else:
+        res = replay_trace(trace, trace_out=recorder)
+        captured = trace.captured_result()
+        if captured is not None and res != captured:
+            raise SystemExit(
+                "--replay: analytic replay diverged from the captured "
+                "EngineResult (trace edited or engine behavior changed)")
+        mode = "replay-sim"
+    if recorder is not None:
+        # propagate the source capture's arch tag so a re-captured trace
+        # keeps the --real arch sanity check armed
+        _save_trace(recorder, args.trace_out, arch=trace.meta.get("arch"))
+    print(json.dumps({
+        "mode": mode, "trace": args.replay,
+        "requests": len(trace.requests),
+        "dispatches": len(trace.dispatches()),
+        "makespan": res.makespan,
+        "compute_busy": round(res.compute_busy, 3),
+        "io_busy": round(res.io_busy, 3)}, indent=1))
 
 
 def main():
@@ -37,7 +125,19 @@ def main():
     ap.add_argument("--io-channels", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--real", action="store_true", help="run a reduced model for real")
+    ap.add_argument("--trace-out", metavar="PATH",
+                    help="capture the restoration schedule to a JSON trace")
+    ap.add_argument("--replay", metavar="PATH",
+                    help="re-execute a captured trace (pinned durations) "
+                         "instead of scheduling fresh; --real replays it "
+                         "on-device with per-request cache verification")
     args = ap.parse_args()
+
+    if args.replay:
+        _replay(args)
+        return
+
+    recorder = TraceRecorder() if args.trace_out else None
 
     if args.real:
         cfg = get_config(args.arch).reduced()
@@ -49,7 +149,9 @@ def main():
                                 io_channels=args.io_channels)
         reqs = [Request(f"r{i}", 0.0, prefix_len=64 + 32 * i, new_len=16)
                 for i in range(args.requests)]
-        rep = eng.serve(reqs)
+        rep = eng.serve(reqs, trace=recorder)
+        if recorder is not None:
+            _save_trace(recorder, args.trace_out, arch=args.arch)
         print(json.dumps({"system": args.system, "mode": "real",
                           "ttft": rep.stats,
                           "compute_busy": round(rep.compute_busy, 3),
@@ -64,7 +166,9 @@ def main():
                            system=args.system, stages=args.stages,
                            max_batch=args.max_batch, kvstore=store,
                            io_channels=args.io_channels)
-    rep = eng.run(reqs)
+    rep = eng.run(reqs, trace=recorder)
+    if recorder is not None:
+        _save_trace(recorder, args.trace_out, arch=args.arch)
     print(json.dumps({
         "system": args.system, "workload": args.workload,
         "bandwidth": args.bandwidth, "hardware": args.hardware,

@@ -87,7 +87,9 @@ class SimServingEngine:
             channel_fail_at=self.channel_fail_at,
             kvstore=self.kvstore, **kw)
 
-    def run(self, requests: List[Request]) -> ServingReport:
+    def run(self, requests: List[Request], trace=None) -> ServingReport:
+        """``trace``: optional ``TraceRecorder`` capturing the restoration
+        schedule for deterministic replay (see :mod:`repro.core.trace`)."""
         bounds = (stage_bounds(self.cfg.num_layers, self.stages)
                   if self.stages > 1 else None)
         engine_reqs = []
@@ -101,7 +103,7 @@ class SimServingEngine:
             if self.kvstore is not None:
                 self.kvstore.put(r.request_id,
                                  r.prefix_len * self.cfg.kv_bytes_per_token())
-        res = self._make_core().run(engine_reqs)
+        res = self._make_core().run(engine_reqs, trace=trace)
         ttfts, restore_secs = {}, {}
         for r in requests:
             fin = res.restore_finish.get(r.request_id)
@@ -166,7 +168,8 @@ class RealServingEngine:
 
     def serve(self, requests: List[Request], *, verify: bool = True,
               op_order: str = "measured",
-              rng: Optional[np.random.Generator] = None) -> ServingReport:
+              rng: Optional[np.random.Generator] = None,
+              trace=None) -> ServingReport:
         """Restore ALL requests concurrently through the shared engine core
         (continuous batching), then verify + suffix-prefill each.
 
@@ -178,7 +181,10 @@ class RealServingEngine:
         arranged on the engine's resource model, where compute and I/O
         overlap as they would on parallel hardware — this host executes ops
         serially, so the true serial wall time for the whole batch is
-        reported separately as ``stats["restore_wall"]``."""
+        reported separately as ``stats["restore_wall"]``.
+
+        ``trace``: optional ``TraceRecorder`` capturing the restoration
+        schedule for deterministic replay (see :mod:`repro.core.trace`)."""
         cfg = self.model.cfg
         bounds = (stage_bounds(cfg.num_layers, self.stages)
                   if self.stages > 1 else None)
@@ -197,7 +203,7 @@ class RealServingEngine:
                           max_active=self.max_batch, kvstore=self.kvstore,
                           strict=True)
         t0 = time.perf_counter()
-        res = core.run(engine_reqs)
+        res = core.run(engine_reqs, trace=trace)
         restore_wall = time.perf_counter() - t0
         ttfts, restore_secs = {}, {}
         for r in requests:

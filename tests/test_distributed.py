@@ -158,7 +158,10 @@ def test_compressed_psum_under_shard_map():
     code = textwrap.dedent("""
         import json
         import jax, jax.numpy as jnp, numpy as np
-        from jax import shard_map
+        try:
+            from jax import shard_map
+        except ImportError:              # moved out of experimental in jax 0.5
+            from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.training.compression import error_feedback_psum
 

@@ -46,7 +46,9 @@ def test_grad_accum_matches_full_batch():
     p4, s4, m4 = step4(params, state, batch)
     np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]), rtol=1e-5)
     l1, l4 = jax.tree.leaves(p1)[0], jax.tree.leaves(p4)[0]
-    np.testing.assert_allclose(np.asarray(l1), np.asarray(l4), atol=1e-5)
+    # fp32 summation order differs between one big batch and 4 accumulated
+    # micro-batches; on CPU the worst element lands a few e-5 apart.
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l4), atol=1e-4)
 
 
 def test_data_pipeline_determinism_and_sharding():
