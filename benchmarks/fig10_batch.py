@@ -34,7 +34,8 @@ def run():
         rows.append(row(
             f"fig10/batch={bs}", cf["mean"],
             f"vs_classic={classic / cf['mean']:.2f}x (paper band 1.6-2.6x) "
-            f"tail_vs_cake={cake['p99'] / cf['p99']:.3f}x"))
+            f"tail_vs_cake={cake['p99'] / cf['p99']:.3f}x "
+            f"e2e={cf['e2e_mean']:.3f}s tok/s={cf['tokens_per_sec']:.1f}"))
     rows.append(row("fig10/batch-awareness", 0.0,
                     f"p99_gain_vs_cake@2={tail_gains[0]:.3f}x "
                     f"@8={tail_gains[-1]:.3f}x grows={tail_gains[-1] >= tail_gains[0]}"))

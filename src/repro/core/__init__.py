@@ -23,4 +23,5 @@ from repro.core.engine_core import (EngineBackend, EngineCore, EngineRequest,  #
 from repro.core.simulator import RestorationSimulator, SimRequest, SimResult  # noqa: F401
 from repro.core.executor import RestorationExecutor  # noqa: F401
 from repro.core.trace import (ReplayBackend, ReplayDivergence, ScheduleTrace,  # noqa: F401
-                              TraceEvent, TraceRecorder, capture, replay_trace)
+                              TraceEvent, TraceRecorder, TraceVersionError,
+                              capture, replay_trace)

@@ -71,6 +71,25 @@ class CostModel:
         return n_layers * n_tokens * per_layer / (self.io_bandwidth * self.io_channels)
 
     # ------------------------------------------------------------------
+    # Decode (lifecycle phases beyond restoration)
+    # ------------------------------------------------------------------
+    def t_decode_step(self, context_lens) -> float:
+        """One batched decode step (one token for each request in the
+        continuous batch): HBM-bandwidth-bound — the weights stream once
+        per step and each request's KV context is read once — plus the
+        fixed kernel overhead.  ``context_lens`` are per-request attended
+        context lengths (capped by the attention window)."""
+        pc = self.cfg.param_counts()
+        param_bytes = 2.0 * (pc["active"] - pc["embedding"])   # bf16 weights
+        kv = 0.0
+        for n in context_lens:
+            if self.cfg.attn_window:
+                n = min(n, self.cfg.attn_window)
+            kv += n * self.bytes_per_token()
+        return (param_bytes + kv) / (self.hw.hbm_bw * self.num_chips) \
+            + self.hw.kernel_overhead_s
+
+    # ------------------------------------------------------------------
     # Paper closed forms
     # ------------------------------------------------------------------
     def harmonic_bound(self, n: int) -> float:

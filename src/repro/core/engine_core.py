@@ -1,11 +1,25 @@
-"""Backend-agnostic batched restoration engine core.
+"""Backend-agnostic batched request-lifecycle engine core.
 
 One event loop drives the paper's ``BatchScheduler`` (Algorithm 1) over a
-batch of concurrent requests.  The loop owns every scheduling concern:
+batch of concurrent requests through their WHOLE serving lifecycle:
 
-  * continuous-batching admission (``max_active``),
-  * one compute resource per pipeline stage (chunk recomputes serialize on
-    the stage's chips),
+    RESTORING -> PREFILL -> DECODE -> DONE
+
+  * RESTORING — the 3D two-pointer restoration of the cached prefix
+    (per-stage compute resources + shared I/O channels, §3.3).
+  * PREFILL   — one suffix-prefill op per pipeline stage (in stage order),
+    competing FCFS with other requests' restoration chunks on the same
+    stage compute; its completion is the request's FIRST TOKEN.
+  * DECODE    — a recurring batched decode op on a dedicated decode-batch
+    resource steps *all* decode-phase requests together, one token per
+    step; the last step is the request's FINISH.
+
+The loop owns every scheduling concern:
+
+  * continuous-batching admission (``max_active``) — a slot is held for the
+    whole lifecycle and freed at DECODE completion, not restore completion,
+  * one compute resource per pipeline stage (chunk recomputes and suffix
+    prefills serialize on the stage's chips),
   * ``io_channels`` shared transfer channels (contention = queueing, §3.3),
   * per-channel slowdown / failure injection (failed transfers release their
     claim and are rescheduled — restoration ops are idempotent),
@@ -23,13 +37,18 @@ seconds of real JAX execution — is delegated to a pluggable backend:
 
 Because both backends run the *identical* admission/dispatch logic, the
 simulator measures exactly the schedule whose correctness the real backend
-proves — including multi-request interleavings.
+proves — including multi-request interleavings across all phases.
+
+Requests with ``new_len == 0`` and ``decode_len == 0`` are restoration-only:
+their lifecycle collapses to RESTORING -> DONE and the loop behaves exactly
+as the pre-lifecycle core (``RestorationSimulator`` / ``.restore()``).
 """
 from __future__ import annotations
 
 import heapq
 import itertools
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -43,20 +62,27 @@ from repro.core.scheduler import BatchScheduler, ScheduledOp
 @dataclass
 class EngineRequest:
     """A request as the engine core sees it: identity, prefix length,
-    arrival time, and one RequestPlan per pipeline stage."""
+    arrival time, one RequestPlan per pipeline stage, and its lifecycle
+    extent — suffix tokens to prefill and output tokens to generate."""
     request_id: str
     n_tokens: int                   # prefix to restore
     arrival: float = 0.0
     plans: List[RequestPlan] = field(default_factory=list)  # one per stage
+    new_len: int = 0                # fresh suffix tokens (0 = restore-only)
+    decode_len: int = 0             # output tokens (first from prefill)
 
 
 @dataclass
 class EngineResult:
     restore_finish: Dict[str, float]
     restore_start: Dict[str, float]
+    first_token: Dict[str, float]   # suffix prefill done (TTFT reference)
+    finish: Dict[str, float]        # lifecycle complete (slot freed here)
     makespan: float
     compute_busy: float             # fraction of makespan, averaged over stages
     io_busy: float                  # fraction, averaged over channels
+    decode_busy: float              # decode-batch resource busy fraction
+    decode_steps: int               # batched decode steps executed
     ops_log: List[Tuple[float, float, str, str]]  # (start, end, resource, op-desc)
 
 
@@ -83,13 +109,26 @@ class EngineBackend:
                 bandwidth: Optional[float]) -> float:
         raise NotImplementedError
 
+    def prefill_secs(self, op: ScheduledOp, req: EngineRequest) -> float:
+        """Duration of one suffix-prefill stage op (kind == "prefill")."""
+        raise NotImplementedError
+
+    def decode_secs(self, reqs: List[EngineRequest]) -> float:
+        """Duration of one batched decode step over every decode-phase
+        request (sorted by arrival) — one generated token each."""
+        raise NotImplementedError
+
     def io_benefit(self, plan: RequestPlan, unit: int,
                    bandwidth: Optional[float]) -> bool:
         """Marginal-benefit gate (§3.3); default = eager loading."""
         return True
 
+    def restore_done(self, req: EngineRequest) -> None:
+        """Called once when every stage plan of the request is restored
+        (before suffix prefill touches the cache)."""
+
     def request_done(self, req: EngineRequest) -> None:
-        """Called once when every stage plan of the request is done."""
+        """Called once when the request's whole lifecycle completes."""
 
 
 class SimBackend(EngineBackend):
@@ -122,6 +161,15 @@ class SimBackend(EngineBackend):
         frac = (hi - lo) / self.cost.cfg.num_layers
         bytes_ = (t1 - t0) * self.cost.bytes_per_token() * frac
         return bytes_ / self._bw(op.request_id, bandwidth)
+
+    def prefill_secs(self, op: ScheduledOp, req: EngineRequest) -> float:
+        # same compute roofline as a restoration chunk: the suffix tokens
+        # attend to the (restored) prefix, scaled to the stage's layer slice
+        return self.compute_secs(op, req)
+
+    def decode_secs(self, reqs: List[EngineRequest]) -> float:
+        return self.cost.t_decode_step(
+            [r.n_tokens + r.new_len for r in reqs])
 
     def io_benefit(self, plan: RequestPlan, unit: int,
                    bandwidth: Optional[float]) -> bool:
@@ -194,7 +242,24 @@ class RealBackend(EngineBackend):
                 bandwidth: Optional[float]) -> float:
         return self._run_op(op)
 
-    def request_done(self, req: EngineRequest) -> None:
+    def prefill_secs(self, op: ScheduledOp, req: EngineRequest) -> float:
+        return self._run_op(op)
+
+    def decode_secs(self, reqs: List[EngineRequest]) -> float:
+        rids = [r.request_id for r in reqs]
+        if self.dur_fn is not None:
+            self.executor.decode_step_batch(rids)
+            op = ScheduledOp("decode", rids[0], -1, 0, (0, 0), (0, 0))
+            return max(1e-12, float(self.dur_fn(op)))
+        import jax
+        t0 = time.perf_counter()
+        self.executor.decode_step_batch(rids)
+        jax.block_until_ready(
+            [jax.tree.leaves(self.executor.live_cache(r)) for r in rids])
+        return max(1e-12, time.perf_counter() - t0)
+
+    def restore_done(self, req: EngineRequest) -> None:
+        # verify BEFORE prefill/decode append to the restored cache
         self.executor.finalize_restore(req.request_id)
         if self.verify:
             self.executor.verify(req.request_id)
@@ -272,14 +337,20 @@ class EngineCore:
 
         comp_free = {s: True for s in range(self.stages)}
         io_free = {c: True for c in range(self.io_channels)}
+        decode_free = True
         failed = set()
         busy_comp = {s: 0.0 for s in range(self.stages)}
         busy_io = {c: 0.0 for c in range(self.io_channels)}
+        busy_decode = 0.0
+        decode_steps = 0
         restore_finish: Dict[str, float] = {}
         restore_start: Dict[str, float] = {}
+        first_token: Dict[str, float] = {}
+        finish: Dict[str, float] = {}
+        decoding: Dict[str, int] = {}   # rid -> decode steps remaining
         ops_log: List[Tuple[float, float, str, str]] = []
         reqs: Dict[str, EngineRequest] = {}
-        pending: List[EngineRequest] = []
+        pending: "deque[EngineRequest]" = deque()
         active: set = set()
 
         def stage_unblocked(op_stage: int, rid: str) -> bool:
@@ -293,27 +364,35 @@ class EngineCore:
             return True
 
         def dispatch():
+            nonlocal decode_free, busy_decode, decode_steps
             # compute per stage.  A stage-blocked head request (sequential
             # ablation) is SKIPPED, not a reason to stop: other requests'
-            # runnable ops on this stage must still dispatch.
+            # runnable ops on this stage must still dispatch.  Candidates are
+            # phase-aware: restoration chunks and suffix-prefill ops compete
+            # FCFS for the same stage compute (see BatchScheduler).
             for s in range(self.stages):
                 blocked: set = set()
                 while comp_free[s]:
                     op = sched.next_compute(stage=s, skip=blocked)
                     if op is None:
                         break
-                    if not stage_unblocked(op.stage, op.request_id):
+                    if op.kind == "compute" and \
+                            not stage_unblocked(op.stage, op.request_id):
                         # release the claim; retry when upstream finishes
                         sched.plans[(op.request_id, op.stage)].plan.comp_inflight = None
                         blocked.add((op.request_id, op.stage))
                         continue
                     r = reqs[op.request_id]
-                    restore_start.setdefault(op.request_id, now)
-                    dur = self.backend.compute_secs(op, r)
+                    if op.kind == "prefill":
+                        dur = self.backend.prefill_secs(op, r)
+                        desc = f"{op.request_id}:p{op.unit}"
+                    else:
+                        restore_start.setdefault(op.request_id, now)
+                        dur = self.backend.compute_secs(op, r)
+                        desc = f"{op.request_id}:c{op.unit}"
                     comp_free[s] = False
                     busy_comp[s] += dur
-                    ops_log.append((now, now + dur, f"comp{s}",
-                                    f"{op.request_id}:c{op.unit}"))
+                    ops_log.append((now, now + dur, f"comp{s}", desc))
                     if trace is not None:
                         trace.record_dispatch(now, f"comp{s}", op, dur, None)
                     heapq.heappush(events, (now + dur, next(counter), "comp_done", (s, op)))
@@ -340,6 +419,18 @@ class EngineCore:
                     if trace is not None:
                         trace.record_dispatch(now, f"io{c}", op, dur, bw)
                     heapq.heappush(events, (now + dur, next(counter), "io_done", (c, op)))
+            # the decode-batch resource: one recurring step over EVERY
+            # decode-phase request (continuous batching), one token each
+            if decode_free and decoding:
+                rids = sorted(decoding, key=lambda rid: sched.arrival_index[rid])
+                dur = self.backend.decode_secs([reqs[rid] for rid in rids])
+                decode_free = False
+                busy_decode += dur
+                decode_steps += 1
+                ops_log.append((now, now + dur, "decode", ",".join(rids)))
+                if trace is not None:
+                    trace.record_decode(now, rids, dur)
+                heapq.heappush(events, (now + dur, next(counter), "decode_done", rids))
 
         def admit(r: EngineRequest):
             reqs[r.request_id] = r
@@ -350,6 +441,43 @@ class EngineCore:
                 trace.record_admit(now, r.request_id)
             if self.kvstore is not None:
                 self.kvstore.touch(r.request_id)
+
+        def finish_request(rid: str):
+            """Lifecycle complete: free the admission slot (continuous
+            batching frees capacity at DECODE completion, not restore)."""
+            finish[rid] = now
+            active.discard(rid)
+            self.backend.request_done(reqs[rid])
+            if trace is not None:
+                trace.record_finish(now, rid)
+            while pending and (not self.max_active
+                               or len(active) < self.max_active):
+                admit(pending.popleft())
+
+        def enter_decode(rid: str):
+            """Transition out of PREFILL (or RESTORING when new_len == 0):
+            queue the remaining output tokens for batched decode."""
+            r = reqs[rid]
+            steps = r.decode_len - (1 if r.new_len > 0 else 0)
+            if steps > 0:
+                decoding[rid] = steps
+            else:
+                finish_request(rid)
+
+        def on_restored(rid: str):
+            r = reqs[rid]
+            restore_finish[rid] = now
+            self.backend.restore_done(r)
+            if trace is not None:
+                trace.record_done(now, rid)
+            if self.kvstore is not None:
+                # restored KV is hot again: refresh LRU + pull it up
+                self.kvstore.touch(rid)
+                self.kvstore.promote(rid, self.promote_tier)
+            if r.new_len > 0:
+                sched.begin_prefill(rid, r.n_tokens, r.new_len)
+            else:
+                enter_decode(rid)
 
         while events:
             now, _, kind, payload = heapq.heappop(events)
@@ -365,6 +493,10 @@ class EngineCore:
                 sched.complete(op)
                 if trace is not None:
                     trace.record_complete(now, f"comp{s}", op)
+                if op.kind == "prefill" and sched.prefill_done(op.request_id):
+                    # last pipeline stage of the suffix done -> first token
+                    first_token[op.request_id] = now
+                    enter_decode(op.request_id)
             elif kind == "io_done":
                 c, op = payload
                 io_free[c] = True
@@ -382,21 +514,20 @@ class EngineCore:
                 failed.add(payload)
                 if trace is not None:
                     trace.record_fail(now, payload)
-            # request completions (+ admit queued requests)
+            elif kind == "decode_done":
+                decode_free = True
+                for rid in payload:
+                    decoding[rid] -= 1
+                    # decode-only lifecycles (new_len == 0): the first
+                    # generated token IS the first token
+                    first_token.setdefault(rid, now)
+                    if decoding[rid] <= 0:
+                        del decoding[rid]
+                        finish_request(rid)
+            # restoration completions -> phase transition
             for rid in list(active):
                 if rid not in restore_finish and sched.request_done(rid):
-                    restore_finish[rid] = now
-                    active.discard(rid)
-                    self.backend.request_done(reqs[rid])
-                    if trace is not None:
-                        trace.record_done(now, rid)
-                    if self.kvstore is not None:
-                        # restored KV is hot again: refresh LRU + pull it up
-                        self.kvstore.touch(rid)
-                        self.kvstore.promote(rid, self.promote_tier)
-                    while pending and (not self.max_active
-                                       or len(active) < self.max_active):
-                        admit(pending.pop(0))
+                    on_restored(rid)
             dispatch()
 
         if self.strict and (pending or active):
@@ -404,13 +535,17 @@ class EngineCore:
             raise RuntimeError(
                 f"engine core stalled before completion: {unfinished}")
 
-        makespan = max(restore_finish.values(), default=0.0) or 1e-12
+        makespan = max(finish.values(), default=0.0) or 1e-12
         result = EngineResult(
             restore_finish=restore_finish,
             restore_start=restore_start,
+            first_token=first_token,
+            finish=finish,
             makespan=makespan,
             compute_busy=sum(busy_comp.values()) / (max(1, self.stages) * makespan),
             io_busy=sum(busy_io.values()) / (max(1, self.io_channels) * makespan),
+            decode_busy=busy_decode / makespan,
+            decode_steps=decode_steps,
             ops_log=ops_log,
         )
         if trace is not None:

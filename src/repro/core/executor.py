@@ -1,13 +1,17 @@
-"""Real-JAX restoration executor.
+"""Real-JAX request-lifecycle executor.
 
-Executes CacheFlow restoration ops (from the BatchScheduler / plans) on an
-actual model: compute ops run chunk/layer forwards on device, load ops copy
-KV slices from the stored payload — then the restored cache is verified
-against the full-prefill ground truth.  The simulator measures the schedule;
-this executor proves its *correctness* (restored KV ≡ recomputed KV for any
+Executes CacheFlow lifecycle ops (from the BatchScheduler / plans) on an
+actual model: restoration compute ops run chunk/layer forwards on device,
+load ops copy KV slices from the stored payload, suffix-prefill ops run the
+new turn's tokens through each pipeline stage of the restored cache (the
+last stage yields the first-token logits), and batched decode steps append
+one generated token per request.  The restored cache is verified against
+the full-prefill ground truth.  The simulator measures the schedule; this
+executor proves its *correctness* (restored KV ≡ recomputed KV for any
 legal op interleaving — a property test randomises the interleaving).
 
-Requests are single-sequence (B = 1) as in the serving engine.
+Requests are single-sequence (B = 1) as in the serving engine; decode
+batches across requests by stepping each live cache in arrival order.
 """
 from __future__ import annotations
 
@@ -20,6 +24,7 @@ import numpy as np
 from repro.core.boundary import BoundaryStore, StoredRequest, stage_bounds
 from repro.core.plans import RequestPlan, make_request_plans
 from repro.core.scheduler import ScheduledOp
+from repro.models.kvcache import grow_cache
 from repro.models.model import Model
 
 ATTN_FIELDS = ("k", "v", "ckv")
@@ -36,6 +41,9 @@ class RestorationExecutor:
         self.bounds = stage_bounds(model.cfg.num_layers, stages)
         # live restoration state: rid -> dict(cache=..., act={stage: x}, ...)
         self._live: Dict[str, dict] = {}
+        # lifecycle inputs registered before the engine runs:
+        # rid -> (suffix inputs | None, decode_len)
+        self._suffix: Dict[str, Tuple[object, int]] = {}
 
     # ------------------------------------------------------------------
     # Previous turn: full (chunked) prefill; persist KV + boundaries + states
@@ -97,9 +105,32 @@ class RestorationExecutor:
                                   stage_bounds=self.bounds if self.stages > 1 else None,
                                   strategy=strategy)
 
+    # ------------------------------------------------------------------
+    # Lifecycle inputs (registered before the engine core runs)
+    # ------------------------------------------------------------------
+    def set_suffix(self, rid: str, new_inputs, decode_len: int = 0):
+        """Register the request's new-turn suffix (may be None for
+        decode-only lifecycles) and decode extent; the engine core's
+        prefill/decode ops pull from here."""
+        self._suffix[rid] = (new_inputs, decode_len)
+
+    def suffix_inputs(self, rid: str):
+        return self._suffix[rid][0]
+
+    def outputs(self, rid: str) -> dict:
+        """Per-request lifecycle outputs: first-token logits, greedy token
+        ids, and the logits of every decode step."""
+        live = self._live[rid]
+        return {"first_logits": live.get("first_logits"),
+                "last_logits": live.get("last_logits"),
+                "tokens": list(live.get("tokens_out", [])),
+                "step_logits": list(live.get("step_logits", []))}
+
     def execute_op(self, op: ScheduledOp):
         if op.kind == "compute":
             self._exec_compute(op)
+        elif op.kind == "prefill":
+            self._exec_prefill(op)
         else:
             self._exec_load(op)
 
@@ -174,6 +205,66 @@ class RestorationExecutor:
                             cache[f] = cache[f].at[slot].set(arr[slot])
         live["cache"] = cache
 
+    # -- suffix prefill (one op per pipeline stage, in stage order) --------
+    def _exec_prefill(self, op: ScheduledOp):
+        m = self.model
+        live = self._live[op.request_id]
+        req: StoredRequest = live["req"]
+        new_inputs, decode_len = self._suffix[op.request_id]
+        t0, t1 = op.tokens
+        lo, hi = op.layers
+        positions = jnp.arange(t0, t1, dtype=jnp.int32)[None]
+        if "prefill_x" not in live:
+            # first stage: make room for suffix + decode tail, embed suffix
+            live["cache"] = grow_cache(m.cfg, live["cache"],
+                                       req.n_tokens + (t1 - t0) + decode_len)
+            live["prefill_x"] = m.embed(self.params, new_inputs, positions)
+        x, cache = m.stack_chunk(self.params, live["prefill_x"], positions,
+                                 live["cache"], lo, hi)
+        live["prefill_x"], live["cache"] = x, cache
+        if hi == m.cfg.num_layers:
+            # last pipeline stage: the suffix's final activation gives the
+            # request's FIRST output token
+            logits = m.unembed(self.params, x[:, -1:])[:, 0]
+            live["first_logits"] = logits
+            live["last_logits"] = logits
+            live["tokens_out"] = [int(jnp.argmax(logits[0]))]
+            live["step_logits"] = []
+            live["pos"] = t1
+
+    # -- batched decode (one token per request per step) -------------------
+    def decode_step_batch(self, rids: List[str]):
+        """One engine decode step: append one generated token to every
+        listed request's live cache (greedy feed of its previous output)."""
+        m, cfg = self.model, self.model.cfg
+        for rid in rids:
+            live = self._live[rid]
+            req: StoredRequest = live["req"]
+            if "pos" not in live:
+                # decode-only lifecycle (no suffix): seed from the stored
+                # prefix's final logits and grow room for the decode tail
+                _, decode_len = self._suffix.get(rid, (None, 0))
+                live["cache"] = grow_cache(cfg, live["cache"],
+                                           req.n_tokens + max(1, decode_len))
+                live["last_logits"] = req.final_logits
+                live["tokens_out"] = []
+                live["step_logits"] = []
+                live["pos"] = req.n_tokens
+            if cfg.input_mode == "tokens":
+                inp = jnp.argmax(live["last_logits"], axis=-1).astype(jnp.int32)
+            else:
+                # embedding frontends have no token feedback path; feed a
+                # deterministic pseudo-embedding keyed on the position
+                key = jax.random.fold_in(jax.random.PRNGKey(0), live["pos"])
+                inp = jax.random.normal(key, (1, cfg.d_model), jnp.float32)
+            logits, cache = m.decode_step(self.params, inp, live["cache"],
+                                          live["pos"])
+            live["cache"] = cache
+            live["last_logits"] = logits
+            live["pos"] += 1
+            live["tokens_out"].append(int(jnp.argmax(logits[0])))
+            live["step_logits"].append(logits)
+
     # ------------------------------------------------------------------
     def restore(self, rid: str, *, l_delta: int = 0, strategy: Optional[str] = None,
                 plans: Optional[List[RequestPlan]] = None,
@@ -246,14 +337,18 @@ class RestorationExecutor:
         return errs
 
     def first_token_logits(self, rid: str, new_inputs):
-        """Prefill the new suffix on the restored cache -> first-token logits."""
+        """Prefill the new suffix on the restored cache -> first-token logits.
+
+        One-shot convenience path (quickstart / direct use); the serving
+        engines instead schedule per-stage ``prefill`` ops through the
+        engine core so the suffix contends for stage compute."""
         m = self.model
         live = self._live[rid]
         req: StoredRequest = live["req"]
         n = req.n_tokens
         # grow cache to fit the suffix
         c_new = new_inputs.shape[1]
-        cache = _grow_cache(self.model, live["cache"], n + c_new)
+        cache = grow_cache(m.cfg, live["cache"], n + c_new)
         logits, cache = m.prefill_chunk(self.params, new_inputs, cache, n)
         live["cache"] = cache
         return logits
@@ -271,20 +366,4 @@ def _state_snapshot(cfg, cache: dict) -> dict:
     for f in ("conv", "lru", "wkv", "shift_tm", "shift_cm"):
         if f in cache:
             out[f] = cache[f]
-    return out
-
-
-def _grow_cache(model: Model, cache: dict, new_len: int) -> dict:
-    from repro.models.kvcache import cache_seq_len
-    target = cache_seq_len(model.cfg, new_len)
-    out = {}
-    for f, a in cache.items():
-        if f in ("k", "v", "ckv") and a.shape[2] < target:
-            pad = [(0, 0)] * a.ndim
-            pad[2] = (0, target - a.shape[2])
-            out[f] = jnp.pad(a, pad)
-        elif f == "kpos" and a.shape[1] < target:
-            out[f] = jnp.pad(a, ((0, 0), (0, target - a.shape[1])), constant_values=-1)
-        else:
-            out[f] = a
     return out

@@ -1,4 +1,4 @@
-"""Batch-aware 3D two-pointer scheduler (paper Algorithm 1).
+"""Batch-aware 3D two-pointer scheduler (paper Algorithm 1), phase-aware.
 
 The scheduler owns the plan state of every active request (per stage) and
 answers two questions whenever a resource frees up:
@@ -11,12 +11,20 @@ answers two questions whenever a resource frees up:
     advances? Compute is batched round-robin (every request makes progress,
     Algorithm 1 line 10).
 
+Beyond restoration, the scheduler generates *lifecycle* candidates: once a
+request finishes restoring, ``begin_prefill`` registers its suffix-prefill
+pipeline (one op per stage, in stage order — the forward pass threads the
+pipeline), and ``next_compute`` arbitrates FCFS between restoration chunks
+and prefill ops on the same stage compute resource. Batched decode runs on
+its own resource and is driven by the engine core directly.
+
 It is deliberately execution-agnostic: the discrete-event simulator and the
 real-JAX executor both drive it, so the *same* scheduling decisions are
 measured for performance and checked for correctness.
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -27,12 +35,23 @@ IO_POLICIES = ("longest_remaining", "fifo", "shortest_remaining", "round_robin")
 
 @dataclass
 class ScheduledOp:
-    kind: str            # "compute" | "load"
+    kind: str            # "compute" | "load" | "prefill" | "decode"
     request_id: str
     stage: int
     unit: int
     tokens: Tuple[int, int]
     layers: Tuple[int, int]
+
+
+@dataclass
+class PrefillPipeline:
+    """Suffix-prefill state for one restored request: one op per pipeline
+    stage, executed in stage order (stage s consumes stage s-1's boundary
+    activations of the *suffix*, so the ops are sequentially dependent)."""
+    tokens: Tuple[int, int]                 # (n_prefix, n_prefix + new_len)
+    stages: List[Tuple[int, int, int]]      # (stage, layer_lo, layer_hi) asc
+    next_idx: int = 0
+    inflight: bool = False
 
 
 @dataclass
@@ -52,6 +71,16 @@ class BatchScheduler:
     _arrival_seq: int = 0
     _rr_io: int = 0
     _rr_comp: Dict[int, int] = field(default_factory=dict)
+    # lifecycle state: suffix-prefill pipelines of requests CURRENTLY in the
+    # prefill phase (pruned on completion so candidate scans stay bounded by
+    # the in-phase population, not the whole batch)
+    _prefill: Dict[str, PrefillPipeline] = field(default_factory=dict)
+    _prefill_finished: set = field(default_factory=set)
+    # O(log B) restoration-head index (ROADMAP open item): a lazy min-heap of
+    # (arrival seq, rid) with fully-restored requests skipped on peek, so
+    # ``next_io`` no longer rescans arrival_order × stages per dispatch.
+    _head_heap: List[Tuple[int, str]] = field(default_factory=list)
+    _restored: set = field(default_factory=set)
 
     # ------------------------------------------------------------------
     def add_request(self, plans: List[RequestPlan]):
@@ -59,6 +88,7 @@ class BatchScheduler:
         if rid not in self.arrival_index:
             self.arrival_order.append(rid)
             self.arrival_index[rid] = self._arrival_seq
+            heapq.heappush(self._head_heap, (self._arrival_seq, rid))
             self._arrival_seq += 1
         self._by_rid[rid] = list(plans)
         for p in plans:
@@ -67,7 +97,10 @@ class BatchScheduler:
 
     def remove_request(self, rid: str):
         self.arrival_order = [r for r in self.arrival_order if r != rid]
-        self.arrival_index.pop(rid, None)
+        self.arrival_index.pop(rid, None)       # head heap skips it lazily
+        self._restored.discard(rid)
+        self._prefill.pop(rid, None)
+        self._prefill_finished.discard(rid)
         for p in self._by_rid.pop(rid, []):
             self.plans.pop((rid, p.stage), None)
             self._by_stage.get(p.stage, {}).pop(rid, None)
@@ -80,11 +113,55 @@ class BatchScheduler:
         return sorted(s for s, d in self._by_stage.items() if d)
 
     def request_done(self, rid: str) -> bool:
+        """All stage plans restored (restoration phase complete)."""
+        if rid in self._restored:
+            return True
         ps = self._by_rid.get(rid, ())
         return bool(ps) and all(p.plan.done for p in ps)
 
     def all_done(self) -> bool:
         return all(p.plan.done for p in self.plans.values())
+
+    def _restoration_head(self) -> Optional[str]:
+        """Oldest admitted request still restoring — O(log B) amortized via
+        the lazy heap (entries for restored/removed requests pop on peek)."""
+        h = self._head_heap
+        while h and (h[0][1] in self._restored
+                     or h[0][1] not in self.arrival_index):
+            heapq.heappop(h)
+        return h[0][1] if h else None
+
+    # ------------------------------------------------------------------
+    # Lifecycle: suffix prefill (phase-aware candidate generation)
+    # ------------------------------------------------------------------
+    def begin_prefill(self, rid: str, n_tokens: int, new_len: int):
+        """Register the restored request's suffix-prefill pipeline: one op
+        per stage over tokens [n_tokens, n_tokens + new_len), in stage
+        order, competing FCFS with restoration chunks in next_compute."""
+        plans = sorted(self._by_rid[rid], key=lambda p: p.stage)
+        self._prefill[rid] = PrefillPipeline(
+            (n_tokens, n_tokens + new_len),
+            [(p.stage, p.layer_lo, p.layer_hi) for p in plans])
+
+    def prefill_done(self, rid: str) -> bool:
+        return rid in self._prefill_finished
+
+    def _prefill_candidate(self, stage: int, skip) -> Optional[str]:
+        best = None
+        for rid, st in self._prefill.items():
+            if st.inflight:
+                continue
+            if st.stages[st.next_idx][0] != stage or (rid, stage) in skip:
+                continue
+            if best is None or self.arrival_index[rid] < self.arrival_index[best]:
+                best = rid
+        return best
+
+    def _claim_prefill(self, rid: str) -> ScheduledOp:
+        st = self._prefill[rid]
+        s, lo, hi = st.stages[st.next_idx]
+        st.inflight = True
+        return ScheduledOp("prefill", rid, s, st.next_idx, st.tokens, (lo, hi))
 
     # ------------------------------------------------------------------
     # Algorithm 1 line 6: I/O channel assignment
@@ -114,8 +191,7 @@ class BatchScheduler:
             # largest remaining restoration (highest marginal recompute
             # saving under quadratic attention), which is what shrinks the
             # tail (paper Fig. 4 P90–P99).
-            head = next((r for r in self.arrival_order
-                         if not self.request_done(r)), None)
+            head = self._restoration_head()
             cands.sort(key=lambda p: (p.request_id != head,
                                       -p.remaining_io_tokens(),
                                       self.arrival_index[p.request_id]))
@@ -152,15 +228,22 @@ class BatchScheduler:
                  and p.plan.comp_enabled
                  and not p.plan.done and p.plan.comp_inflight is None
                  and p.plan.comp_next <= p.plan.io_next]
+        prefill = self._prefill_candidate(stage, skip)
         if not plans:
-            return None
+            return self._claim_prefill(prefill) if prefill is not None else None
         plans.sort(key=lambda p: self.arrival_index[p.request_id])
         if self.compute_policy == "round_robin":
-            start = self._rr_comp.get(stage, 0) % len(plans)
-            p = plans[start]
-            self._rr_comp[stage] = self._rr_comp.get(stage, 0) + 1
+            p = plans[self._rr_comp.get(stage, 0) % len(plans)]
         else:
             p = plans[0]
+        # phase-aware FCFS: a restored request's suffix prefill competes with
+        # other requests' restoration chunks on this stage's compute resource
+        if prefill is not None and \
+                self.arrival_index[prefill] < self.arrival_index[p.request_id]:
+            return self._claim_prefill(prefill)
+        if self.compute_policy == "round_robin":
+            # rotate only when the restoration plan actually gets the slot
+            self._rr_comp[stage] = self._rr_comp.get(stage, 0) + 1
         unit = p.plan.claim_compute()
         if unit is None:
             return None
@@ -174,8 +257,21 @@ class BatchScheduler:
 
     # ------------------------------------------------------------------
     def complete(self, op: ScheduledOp):
+        if op.kind == "prefill":
+            st = self._prefill[op.request_id]
+            st.inflight = False
+            st.next_idx += 1
+            if st.next_idx >= len(st.stages):
+                # pipeline finished: prune so it stops costing candidate scans
+                del self._prefill[op.request_id]
+                self._prefill_finished.add(op.request_id)
+            return
         p = self.plans[(op.request_id, op.stage)]
         if op.kind == "compute":
             p.plan.complete_compute(op.unit)
         else:
             p.plan.complete_io(op.unit)
+        # keep the restoration-head index current (O(stages), once per op)
+        if p.plan.done and op.request_id not in self._restored \
+                and all(q.plan.done for q in self._by_rid[op.request_id]):
+            self._restored.add(op.request_id)

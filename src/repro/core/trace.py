@@ -31,6 +31,13 @@ Replay is legal on either backend:
 This turns the schedule into a first-class artifact: a production incident
 captured from a ``SimBackend`` (or real) run can be re-executed on the real
 backend to reproduce its exact interleaving.
+
+Since schema v2 the capture covers the whole request lifecycle: suffix
+prefill ops appear as regular ``dispatch`` events (op kind ``prefill``) and
+every batched decode step is a ``decode_step`` event with its participant
+list and pinned duration; ``finish`` marks lifecycle completion.  v1
+(restoration-only) traces load by upgrade — their lifecycle extents are
+zero, so replay reproduces the old restore-and-stop behavior exactly.
 """
 from __future__ import annotations
 
@@ -43,7 +50,20 @@ from repro.core.engine_core import (EngineBackend, EngineCore, EngineRequest,
 from repro.core.plans import RequestPlan
 from repro.core.scheduler import ScheduledOp
 
-TRACE_VERSION = 1
+#: Schema history:
+#:   1 — restoration-only traces (pre-lifecycle): no ``new_len``/
+#:       ``decode_len`` on requests, no ``decode_step``/``finish`` events.
+#:       Loaded by upgrading: lifecycle extents default to zero, so the
+#:       replayed lifecycle collapses to RESTORING -> DONE exactly as the
+#:       v1 engine behaved.
+#:   2 — full request lifecycle: requests carry ``new_len``/``decode_len``;
+#:       ``dispatch`` events may carry ``prefill`` ops; new ``decode_step``
+#:       (batched decode, pinned duration) and ``finish`` events.
+TRACE_VERSION = 2
+
+
+class TraceVersionError(ValueError):
+    """The trace's schema version is missing or unsupported."""
 
 
 class ReplayDivergence(RuntimeError):
@@ -59,19 +79,21 @@ class ReplayDivergence(RuntimeError):
 @dataclass
 class TraceEvent:
     """One engine-core decision.  ``kind`` ∈ {admit, gate, dispatch,
-    complete, abort, fail, done}; unused fields stay None (and are dropped
-    from the JSON form)."""
+    complete, abort, fail, done, decode_step, finish}; unused fields stay
+    None (and are dropped from the JSON form).  ``done`` marks restoration
+    complete; ``finish`` marks the whole lifecycle complete (slot freed)."""
     kind: str
     t: float
     resource: Optional[str] = None       # dispatch/complete/abort: comp{s}|io{c}
     op: Optional[dict] = None            # dispatch/complete/abort
-    duration: Optional[float] = None     # dispatch: pinned engine-clock secs
+    duration: Optional[float] = None     # dispatch/decode_step: pinned secs
     bandwidth: Optional[float] = None    # dispatch (I/O): dispatch-time bytes/s
-    request_id: Optional[str] = None     # admit/done/gate
+    request_id: Optional[str] = None     # admit/done/finish/gate
     stage: Optional[int] = None          # gate
     unit: Optional[int] = None           # gate
     allowed: Optional[bool] = None       # gate
     channel: Optional[int] = None        # fail
+    requests: Optional[List[str]] = None  # decode_step: batched rids (sorted)
 
     def to_dict(self) -> dict:
         return {k: v for k, v in asdict(self).items() if v is not None}
@@ -107,18 +129,29 @@ def plan_from_dict(d: dict) -> RequestPlan:
 def result_to_dict(res: EngineResult) -> dict:
     return {"restore_finish": dict(res.restore_finish),
             "restore_start": dict(res.restore_start),
+            "first_token": dict(res.first_token),
+            "finish": dict(res.finish),
             "makespan": res.makespan,
             "compute_busy": res.compute_busy,
             "io_busy": res.io_busy,
+            "decode_busy": res.decode_busy,
+            "decode_steps": res.decode_steps,
             "ops_log": [list(e) for e in res.ops_log]}
 
 
 def result_from_dict(d: dict) -> EngineResult:
+    # v1 results predate the lifecycle: no first token was produced and the
+    # lifecycle finished at restore completion
     return EngineResult(
         restore_finish=dict(d["restore_finish"]),
         restore_start=dict(d["restore_start"]),
+        first_token=dict(d.get("first_token") or {}),
+        finish=dict(d.get("finish") if d.get("finish") is not None
+                    else d["restore_finish"]),
         makespan=d["makespan"], compute_busy=d["compute_busy"],
         io_busy=d["io_busy"],
+        decode_busy=d.get("decode_busy", 0.0),
+        decode_steps=d.get("decode_steps", 0),
         ops_log=[tuple(e) for e in d["ops_log"]])
 
 
@@ -141,13 +174,22 @@ class ScheduleTrace:
     def aborts(self) -> List[TraceEvent]:
         return [e for e in self.events if e.kind == "abort"]
 
+    def prefills(self) -> List[TraceEvent]:
+        return [e for e in self.events
+                if e.kind == "dispatch" and e.op["kind"] == "prefill"]
+
+    def decode_steps(self) -> List[TraceEvent]:
+        return [e for e in self.events if e.kind == "decode_step"]
+
     def captured_result(self) -> Optional[EngineResult]:
         return result_from_dict(self.result) if self.result else None
 
     def rebuild_requests(self) -> List[EngineRequest]:
         """Fresh EngineRequests (pointers at origin) from the recorded specs."""
         return [EngineRequest(r["request_id"], r["n_tokens"], r["arrival"],
-                              [plan_from_dict(p) for p in r["plans"]])
+                              [plan_from_dict(p) for p in r["plans"]],
+                              new_len=r.get("new_len", 0),
+                              decode_len=r.get("decode_len", 0))
                 for r in self.requests]
 
     # -- serialization --------------------------------------------------
@@ -159,6 +201,17 @@ class ScheduleTrace:
 
     @classmethod
     def from_dict(cls, d: dict) -> "ScheduleTrace":
+        version = d.get("version")
+        if version is None:
+            raise TraceVersionError(
+                "trace has no schema version; refusing to guess its format")
+        if version not in (1, TRACE_VERSION):
+            raise TraceVersionError(
+                f"unsupported trace schema version {version}; this loader "
+                f"reads versions 1 (upgraded) and {TRACE_VERSION}")
+        # v1 (pre-lifecycle) traces upgrade implicitly: rebuild_requests and
+        # result_from_dict default the missing lifecycle extents/fields to
+        # zero, so replay collapses to RESTORING -> DONE exactly as v1 ran
         fail_at = d["meta"].get("channel_fail_at") or {}
         meta = dict(d["meta"])
         # JSON stringifies int dict keys; coerce them back
@@ -167,7 +220,7 @@ class ScheduleTrace:
         meta["channel_slowdown"] = {int(k): v for k, v in slow.items()}
         return cls(meta=meta, requests=d["requests"],
                    events=[TraceEvent.from_dict(e) for e in d["events"]],
-                   result=d.get("result"), version=d.get("version", 1))
+                   result=d.get("result"), version=TRACE_VERSION)
 
     def to_json(self, indent: Optional[int] = None) -> str:
         return json.dumps(self.to_dict(), indent=indent)
@@ -206,6 +259,7 @@ class TraceRecorder:
             meta=meta,
             requests=[{"request_id": r.request_id, "n_tokens": r.n_tokens,
                        "arrival": r.arrival,
+                       "new_len": r.new_len, "decode_len": r.decode_len,
                        "plans": [plan_to_dict(p) for p in r.plans]}
                       for r in requests])
 
@@ -236,6 +290,13 @@ class TraceRecorder:
 
     def record_done(self, t: float, rid: str):
         self._ev(kind="done", t=t, request_id=rid)
+
+    def record_decode(self, t: float, rids: List[str], duration: float):
+        self._ev(kind="decode_step", t=t, requests=list(rids),
+                 duration=duration)
+
+    def record_finish(self, t: float, rid: str):
+        self._ev(kind="finish", t=t, request_id=rid)
 
     def finish(self, result: EngineResult):
         self.trace.result = result_to_dict(result)
@@ -272,8 +333,10 @@ class ReplayBackend(EngineBackend):
         self.verify = verify
         self._dispatches = trace.dispatches()
         self._gates = trace.gates()
+        self._decodes = trace.decode_steps()
         self._di = 0
         self._gi = 0
+        self._dci = 0
 
     # -- helpers --------------------------------------------------------
     def _pop_dispatch(self, op: ScheduledOp) -> float:
@@ -306,6 +369,25 @@ class ReplayBackend(EngineBackend):
                 bandwidth: Optional[float]) -> float:
         return self._pop_dispatch(op)
 
+    def prefill_secs(self, op: ScheduledOp, req: EngineRequest) -> float:
+        return self._pop_dispatch(op)
+
+    def decode_secs(self, reqs: List[EngineRequest]) -> float:
+        rids = [r.request_id for r in reqs]
+        if self._dci >= len(self._decodes):
+            raise ReplayDivergence(
+                f"replay issued a decode step over {rids} past the end of "
+                f"the trace ({len(self._decodes)} recorded decode steps)")
+        e = self._decodes[self._dci]
+        self._dci += 1
+        if e.requests != rids:
+            raise ReplayDivergence(
+                f"replay decode step #{self._dci - 1} diverged: engine "
+                f"batched {rids}, trace recorded {e.requests}")
+        if self.executor is not None:
+            self.executor.decode_step_batch(rids)
+        return e.duration
+
     def io_benefit(self, plan: RequestPlan, unit: int,
                    bandwidth: Optional[float]) -> bool:
         if self._gi >= len(self._gates):
@@ -322,7 +404,7 @@ class ReplayBackend(EngineBackend):
                 f"({e.request_id}, {e.stage}, {e.unit})")
         return e.allowed
 
-    def request_done(self, req: EngineRequest) -> None:
+    def restore_done(self, req: EngineRequest) -> None:
         if self.executor is not None:
             self.executor.finalize_restore(req.request_id)
             if self.verify:
@@ -339,6 +421,10 @@ class ReplayBackend(EngineBackend):
             raise ReplayDivergence(
                 f"replay consumed {self._gi}/{len(self._gates)} "
                 f"recorded gate answers")
+        if self._dci != len(self._decodes):
+            raise ReplayDivergence(
+                f"replay consumed {self._dci}/{len(self._decodes)} "
+                f"recorded decode steps")
 
 
 def replay_core(trace: ScheduleTrace, backend: EngineBackend,

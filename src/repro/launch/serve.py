@@ -89,6 +89,19 @@ def _replay(args) -> None:
             else:
                 inputs = jax.random.normal(key, (1, n, cfg.d_model))
             ex.remember(r["request_id"], inputs)
+            # lifecycle traces (schema v2) also re-execute the captured
+            # suffix prefill + decode steps on device
+            new_len = r.get("new_len", 0)
+            decode_len = r.get("decode_len", 0)
+            if new_len > 0 or decode_len > 0:
+                rng, key = jax.random.split(rng)
+                if cfg.input_mode == "tokens":
+                    suffix = jax.random.randint(key, (1, new_len), 0,
+                                                cfg.vocab_size) if new_len else None
+                else:
+                    suffix = jax.random.normal(key, (1, new_len, cfg.d_model)) \
+                        if new_len else None
+                ex.set_suffix(r["request_id"], suffix, decode_len=decode_len)
         res = replay_trace(trace, ex, verify=True, trace_out=recorder)
         mode = "replay-real"
     else:
@@ -107,9 +120,12 @@ def _replay(args) -> None:
         "mode": mode, "trace": args.replay,
         "requests": len(trace.requests),
         "dispatches": len(trace.dispatches()),
+        "prefills": len(trace.prefills()),
+        "decode_steps": len(trace.decode_steps()),
         "makespan": res.makespan,
         "compute_busy": round(res.compute_busy, 3),
-        "io_busy": round(res.io_busy, 3)}, indent=1))
+        "io_busy": round(res.io_busy, 3),
+        "decode_busy": round(res.decode_busy, 3)}, indent=1))
 
 
 def main():
@@ -123,6 +139,10 @@ def main():
     ap.add_argument("--stages", type=int, default=2)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--io-channels", type=int, default=1)
+    ap.add_argument("--decode-len", type=int, default=-1,
+                    help="output tokens per request (lifecycle decode); "
+                         "-1 keeps the workload-drawn lengths (sim) or "
+                         "uses 8 (real)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--real", action="store_true", help="run a reduced model for real")
     ap.add_argument("--trace-out", metavar="PATH",
@@ -147,19 +167,25 @@ def main():
                                 stages=min(args.stages, 2), chunk_size=16,
                                 max_batch=args.max_batch,
                                 io_channels=args.io_channels)
-        reqs = [Request(f"r{i}", 0.0, prefix_len=64 + 32 * i, new_len=16)
+        decode_len = args.decode_len if args.decode_len >= 0 else 8
+        reqs = [Request(f"r{i}", 0.0, prefix_len=64 + 32 * i, new_len=16,
+                        decode_len=decode_len)
                 for i in range(args.requests)]
         rep = eng.serve(reqs, trace=recorder)
         if recorder is not None:
             _save_trace(recorder, args.trace_out, arch=args.arch)
         print(json.dumps({"system": args.system, "mode": "real",
-                          "ttft": rep.stats,
+                          "lifecycle": rep.stats,
                           "compute_busy": round(rep.compute_busy, 3),
-                          "io_busy": round(rep.io_busy, 3)}, indent=1))
+                          "io_busy": round(rep.io_busy, 3),
+                          "decode_busy": round(rep.decode_busy, 3)}, indent=1))
         return
 
     cfg = get_config(args.arch)
     reqs = generate(args.workload, args.requests, seed=args.seed)
+    if args.decode_len >= 0:
+        for r in reqs:
+            r.decode_len = args.decode_len
     store = TieredKVStore(remote_bw=IO_BANDWIDTHS[args.bandwidth])
     eng = SimServingEngine(cfg, HARDWARE[args.hardware],
                            io_bandwidth=IO_BANDWIDTHS[args.bandwidth],
@@ -172,9 +198,10 @@ def main():
     print(json.dumps({
         "system": args.system, "workload": args.workload,
         "bandwidth": args.bandwidth, "hardware": args.hardware,
-        "stages": args.stages, "ttft": rep.stats,
+        "stages": args.stages, "lifecycle": rep.stats,
         "compute_busy": round(rep.compute_busy, 3),
-        "io_busy": round(rep.io_busy, 3)}, indent=1))
+        "io_busy": round(rep.io_busy, 3),
+        "decode_busy": round(rep.decode_busy, 3)}, indent=1))
 
 
 if __name__ == "__main__":

@@ -72,3 +72,23 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -
 
 def cache_bytes(cache: dict) -> int:
     return sum(int(a.size) * a.dtype.itemsize for a in cache.values())
+
+
+def grow_cache(cfg: ModelConfig, cache: dict, new_len: int) -> dict:
+    """Pad the attention KV buffers (k/v/ckv/kpos) so the cache holds
+    ``new_len`` tokens — how suffix prefill and decode append onto a
+    restored prefix cache.  Recurrent/RWKV state fields are length-free and
+    pass through; windowed archs stay capped at the ring-buffer size."""
+    target = cache_seq_len(cfg, new_len)
+    out = {}
+    for f, a in cache.items():
+        if f in ("k", "v", "ckv") and a.shape[2] < target:
+            pad = [(0, 0)] * a.ndim
+            pad[2] = (0, target - a.shape[2])
+            out[f] = jnp.pad(a, pad)
+        elif f == "kpos" and a.shape[1] < target:
+            out[f] = jnp.pad(a, ((0, 0), (0, target - a.shape[1])),
+                             constant_values=-1)
+        else:
+            out[f] = a
+    return out

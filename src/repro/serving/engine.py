@@ -9,12 +9,15 @@ decided identically; only the backend differs:
     paper's hardware profiles; produces TTFT distributions, utilization and
     baseline comparisons at production scale (the paper's §4 experiments).
   * ``RealServingEngine`` — ``RealBackend`` executes the dispatched ops on
-    this host (restoration executor → suffix prefill), wall-clock timed and
-    output-verified; the correctness anchor for the simulator's claims,
-    including multi-request interleavings.
+    this host (restoration → suffix prefill → batched decode), wall-clock
+    timed and output-verified; the correctness anchor for the simulator's
+    claims, including multi-request interleavings.
 
-TTFT = wait + restoration + suffix prefill (the first output token comes out
-of the suffix prefill step).
+The whole first-token path runs INSIDE the engine loop: suffix prefill is a
+scheduled op competing FCFS with other requests' restoration chunks, and
+decode is a recurring batched step — so TTFT = wait + restoration +
+*contended* suffix prefill, and the report additionally carries end-to-end
+latency, TPOT/TBT and generation throughput.
 """
 from __future__ import annotations
 
@@ -30,11 +33,12 @@ from repro.config import HardwareProfile, ModelConfig
 from repro.core.baselines import make_baseline_plans, sim_kwargs
 from repro.core.boundary import stage_bounds
 from repro.core.cost_model import CostModel
-from repro.core.engine_core import (EngineCore, EngineRequest, RealBackend,
-                                    SimBackend, interleaving_dur_fn)
+from repro.core.engine_core import (EngineCore, EngineRequest, EngineResult,
+                                    RealBackend, SimBackend,
+                                    interleaving_dur_fn)
 from repro.core.executor import RestorationExecutor
 from repro.serving.kvstore import TieredKVStore
-from repro.serving.metrics import percentiles
+from repro.serving.metrics import lifecycle_stats, percentiles
 from repro.serving.request import Phase, Request
 
 
@@ -46,10 +50,40 @@ class ServingReport:
     compute_busy: float
     io_busy: float
     stats: dict = field(default_factory=dict)
+    e2e: Dict[str, float] = field(default_factory=dict)       # finish - arrival
+    tpots: Dict[str, float] = field(default_factory=dict)     # per output token
+    decode_busy: float = 0.0
 
     def __post_init__(self):
         if not self.stats:
             self.stats = percentiles(self.ttfts.values())
+
+
+def _fill_lifecycle(requests: List[Request], res: EngineResult):
+    """Map engine-clock lifecycle times back onto the Request objects and
+    derive the per-request serving metrics."""
+    ttfts, restore_secs, e2e, tpots = {}, {}, {}, {}
+    total_tokens = 0
+    for r in requests:
+        rid = r.request_id
+        fin = res.restore_finish.get(rid)
+        if fin is None:
+            continue
+        start = res.restore_start.get(rid, r.arrival)
+        r.t_restore_start, r.t_restore_end = start, fin
+        restore_secs[rid] = fin - start
+        ft = res.first_token.get(rid)
+        done = res.finish.get(rid, fin)
+        r.t_first_token, r.t_done = ft, done
+        r.phase = Phase.DONE
+        if ft is not None:
+            ttfts[rid] = ft - r.arrival
+        e2e[rid] = done - r.arrival
+        n_out = r.decode_len if r.decode_len > 0 else (1 if r.new_len else 0)
+        total_tokens += n_out
+        if ft is not None and n_out > 1:
+            tpots[rid] = (done - ft) / (n_out - 1)
+    return ttfts, restore_secs, e2e, tpots, total_tokens
 
 
 # ---------------------------------------------------------------------------
@@ -88,8 +122,11 @@ class SimServingEngine:
             kvstore=self.kvstore, **kw)
 
     def run(self, requests: List[Request], trace=None) -> ServingReport:
-        """``trace``: optional ``TraceRecorder`` capturing the restoration
-        schedule for deterministic replay (see :mod:`repro.core.trace`)."""
+        """Drive every request through its whole lifecycle (restore →
+        contended suffix prefill → batched decode) on the shared loop.
+
+        ``trace``: optional ``TraceRecorder`` capturing the schedule for
+        deterministic replay (see :mod:`repro.core.trace`)."""
         bounds = (stage_bounds(self.cfg.num_layers, self.stages)
                   if self.stages > 1 else None)
         engine_reqs = []
@@ -99,26 +136,19 @@ class SimServingEngine:
                 chunk_size=self.chunk_size, l_delta=self.l_delta,
                 num_layers=self.cfg.num_layers, stage_bounds=bounds)
             engine_reqs.append(EngineRequest(r.request_id, r.prefix_len,
-                                             arrival=r.arrival, plans=plans))
+                                             arrival=r.arrival, plans=plans,
+                                             new_len=r.new_len,
+                                             decode_len=r.decode_len))
             if self.kvstore is not None:
                 self.kvstore.put(r.request_id,
                                  r.prefix_len * self.cfg.kv_bytes_per_token())
         res = self._make_core().run(engine_reqs, trace=trace)
-        ttfts, restore_secs = {}, {}
-        for r in requests:
-            fin = res.restore_finish.get(r.request_id)
-            if fin is None:
-                continue
-            suffix = self.cost.t_comp_range(r.prefix_len, r.prefix_len + r.new_len,
-                                            chunks=1)
-            r.t_restore_start = res.restore_start.get(r.request_id, r.arrival)
-            r.t_restore_end = fin
-            r.t_first_token = fin + suffix
-            r.phase = Phase.DECODE
-            ttfts[r.request_id] = r.t_first_token - r.arrival
-            restore_secs[r.request_id] = fin - r.t_restore_start
+        ttfts, restore_secs, e2e, tpots, total = _fill_lifecycle(requests, res)
         return ServingReport(self.system, ttfts, restore_secs,
-                             res.compute_busy, res.io_busy)
+                             res.compute_busy, res.io_busy,
+                             e2e=e2e, tpots=tpots, decode_busy=res.decode_busy,
+                             stats=lifecycle_stats(ttfts, e2e, tpots, total,
+                                                   res.makespan))
 
 
 # ---------------------------------------------------------------------------
@@ -170,20 +200,27 @@ class RealServingEngine:
               op_order: str = "measured",
               rng: Optional[np.random.Generator] = None,
               trace=None) -> ServingReport:
-        """Restore ALL requests concurrently through the shared engine core
-        (continuous batching), then verify + suffix-prefill each.
+        """Drive ALL requests through the shared engine core for their whole
+        lifecycle: concurrent restoration (continuous batching), per-stage
+        suffix prefill competing FCFS with restoration chunks, and recurring
+        batched decode steps — every op executes on device.
+
+        ``verify=True`` checks each restored cache against its full-prefill
+        ground truth the moment restoration completes (before the suffix
+        touches the cache); per-request first-token logits and greedy decode
+        outputs are retrievable via ``self.executor.outputs(rid)``.
 
         op_order="measured" drives the schedule with real measured op
         durations; the other modes (see ``interleaving_dur_fn``) randomize
         the multi-request interleaving for correctness testing.
 
-        Reported ``ttfts`` are ENGINE-CLOCK times: measured per-op durations
-        arranged on the engine's resource model, where compute and I/O
-        overlap as they would on parallel hardware — this host executes ops
-        serially, so the true serial wall time for the whole batch is
-        reported separately as ``stats["restore_wall"]``.
+        Reported times are ENGINE-CLOCK times: measured per-op durations
+        arranged on the engine's resource model, where compute, I/O and
+        decode overlap as they would on parallel hardware — this host
+        executes ops serially, so the true serial wall time for the whole
+        batch is reported separately as ``stats["serve_wall"]``.
 
-        ``trace``: optional ``TraceRecorder`` capturing the restoration
+        ``trace``: optional ``TraceRecorder`` capturing the lifecycle
         schedule for deterministic replay (see :mod:`repro.core.trace`)."""
         cfg = self.model.cfg
         bounds = (stage_bounds(cfg.num_layers, self.stages)
@@ -193,38 +230,33 @@ class RealServingEngine:
             if r.request_id not in self.executor.store:
                 self.remember(r)
             r.phase = Phase.RESTORING
+            if r.new_len > 0 or r.decode_len > 0:
+                suffix = self._inputs(r.new_len) if r.new_len > 0 else None
+                self.executor.set_suffix(r.request_id, suffix,
+                                         decode_len=r.decode_len)
             engine_reqs.append(EngineRequest(r.request_id, r.prefix_len,
                                              arrival=r.arrival,
-                                             plans=self._make_plans(r, bounds)))
+                                             plans=self._make_plans(r, bounds),
+                                             new_len=r.new_len,
+                                             decode_len=r.decode_len))
         backend = RealBackend(self.executor,
-                              dur_fn=interleaving_dur_fn(op_order, rng))
+                              dur_fn=interleaving_dur_fn(op_order, rng),
+                              verify=verify)
         core = EngineCore(backend, stages=self.stages,
                           io_channels=self.io_channels,
                           max_active=self.max_batch, kvstore=self.kvstore,
                           strict=True)
         t0 = time.perf_counter()
         res = core.run(engine_reqs, trace=trace)
-        restore_wall = time.perf_counter() - t0
-        ttfts, restore_secs = {}, {}
+        serve_wall = time.perf_counter() - t0
+        ttfts, restore_secs, e2e, tpots, total = _fill_lifecycle(requests, res)
         for r in requests:
-            if verify:
-                self.executor.verify(r.request_id)  # raises on any mismatch
-            r.phase = Phase.PREFILL
-            tp = time.perf_counter()
-            logits = self.executor.first_token_logits(
-                r.request_id, self._inputs(r.new_len))
-            jax.block_until_ready(logits)
-            prefill_wall = time.perf_counter() - tp
-            assert np.isfinite(np.asarray(logits)).all()
-            fin = res.restore_finish[r.request_id]
-            start = res.restore_start.get(r.request_id, r.arrival)
-            r.t_restore_start, r.t_restore_end = start, fin
-            restore_secs[r.request_id] = fin - start
-            # engine-clock queue+restore (measured op durations) + real prefill
-            ttfts[r.request_id] = (fin - r.arrival) + prefill_wall
-            r.t_first_token = r.arrival + ttfts[r.request_id]
-            r.phase = Phase.DONE
+            if r.new_len > 0:
+                out = self.executor.outputs(r.request_id)
+                assert np.isfinite(np.asarray(out["first_logits"])).all()
         return ServingReport(self.system, ttfts, restore_secs,
                              res.compute_busy, res.io_busy,
-                             stats=percentiles(ttfts.values())
-                             | {"restore_wall": restore_wall})
+                             e2e=e2e, tpots=tpots, decode_busy=res.decode_busy,
+                             stats=lifecycle_stats(ttfts, e2e, tpots, total,
+                                                   res.makespan)
+                             | {"serve_wall": serve_wall})

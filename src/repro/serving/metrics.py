@@ -1,7 +1,7 @@
-"""TTFT / utilization metrics."""
+"""TTFT / lifecycle / utilization metrics."""
 from __future__ import annotations
 
-from typing import Dict, Iterable, List
+from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
@@ -25,3 +25,26 @@ def cdf(values: Iterable[float], n_points: int = 50) -> List[tuple]:
 
 def speedup(baseline: Dict[str, float], ours: Dict[str, float], key: str = "mean") -> float:
     return baseline[key] / max(ours[key], 1e-12)
+
+
+def lifecycle_stats(ttfts: Dict[str, float],
+                    e2e: Optional[Dict[str, float]] = None,
+                    tpots: Optional[Dict[str, float]] = None,
+                    total_tokens: int = 0,
+                    makespan: float = 0.0) -> Dict[str, float]:
+    """Whole-lifecycle serving summary: the classic TTFT percentiles plus
+    end-to-end request latency, per-output-token time (TPOT — for a batched
+    decode step this is also the time between tokens, TBT) and generation
+    throughput over the run."""
+    out = percentiles(ttfts.values())
+    if e2e:
+        ep = percentiles(e2e.values())
+        out["e2e_mean"] = ep["mean"]
+        out["e2e_p99"] = ep["p99"]
+    if tpots:
+        tp = percentiles(tpots.values())
+        out["tpot_mean"] = tp["mean"]
+        out["tpot_p99"] = tp["p99"]
+    if total_tokens and makespan > 0:
+        out["tokens_per_sec"] = total_tokens / makespan
+    return out
