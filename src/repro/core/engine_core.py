@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import math
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -62,14 +63,19 @@ from repro.core.scheduler import BatchScheduler, ScheduledOp
 @dataclass
 class EngineRequest:
     """A request as the engine core sees it: identity, prefix length,
-    arrival time, one RequestPlan per pipeline stage, and its lifecycle
-    extent — suffix tokens to prefill and output tokens to generate."""
+    arrival time, one RequestPlan per pipeline stage, its lifecycle extent
+    — suffix tokens to prefill and output tokens to generate — and its SLO
+    class: ``priority`` (higher = more urgent) and ``deadline`` (engine-
+    clock instant the first token is wanted by; ``inf`` = best-effort).
+    The engine's preemption policy compares these at admission pressure."""
     request_id: str
     n_tokens: int                   # prefix to restore
     arrival: float = 0.0
     plans: List[RequestPlan] = field(default_factory=list)  # one per stage
     new_len: int = 0                # fresh suffix tokens (0 = restore-only)
     decode_len: int = 0             # output tokens (first from prefill)
+    priority: int = 0               # SLO class (preempt="priority")
+    deadline: float = math.inf      # first-token SLO (preempt="deadline")
 
 
 @dataclass
@@ -84,6 +90,10 @@ class EngineResult:
     decode_busy: float              # decode-batch resource busy fraction
     decode_steps: int               # batched decode steps executed
     ops_log: List[Tuple[float, float, str, str]]  # (start, end, resource, op-desc)
+    # rid -> times its restoration was suspended (preempt="priority"|
+    # "deadline"); aborted/preempted op time is EXCLUDED from the busy
+    # fractions above and tagged ":aborted" in ops_log.
+    preemptions: Dict[str, int] = field(default_factory=dict)
 
 
 # ---------------------------------------------------------------------------
@@ -119,9 +129,19 @@ class EngineBackend:
         raise NotImplementedError
 
     def io_benefit(self, plan: RequestPlan, unit: int,
-                   bandwidth: Optional[float]) -> bool:
-        """Marginal-benefit gate (§3.3); default = eager loading."""
+                   bandwidth: Optional[float], slowdown: float = 1.0) -> bool:
+        """Marginal-benefit gate (§3.3); default = eager loading.
+        ``slowdown`` is the CANDIDATE CHANNEL's duration multiplier — the
+        gate must price the transfer at the channel the unit would actually
+        ride, not the nominal kvstore/default bandwidth."""
         return True
+
+    def suspend(self, req: EngineRequest) -> None:
+        """Called when the request's restoration is preempted: its
+        partially-restored cache parks (NOT finalized) until resume."""
+
+    def resume(self, req: EngineRequest) -> None:
+        """Called when a preempted request re-enters the active batch."""
 
     def restore_done(self, req: EngineRequest) -> None:
         """Called once when every stage plan of the request is restored
@@ -172,10 +192,13 @@ class SimBackend(EngineBackend):
             [r.n_tokens + r.new_len for r in reqs])
 
     def io_benefit(self, plan: RequestPlan, unit: int,
-                   bandwidth: Optional[float]) -> bool:
+                   bandwidth: Optional[float], slowdown: float = 1.0) -> bool:
         """Spend a channel on this unit only if the transfer finishes before
         compute alone could have covered the remaining span through it —
-        otherwise loading delays completion (the channel pins the unit)."""
+        otherwise loading delays completion (the channel pins the unit).
+        The transfer is priced at the candidate channel's EFFECTIVE
+        bandwidth (nominal / slowdown): a degraded channel must not pass a
+        gate its real transfer time would fail."""
         if not self.benefit_gate:
             return True
         if not plan.plan.comp_enabled:
@@ -183,7 +206,7 @@ class SimBackend(EngineBackend):
         tokens, layers = plan.io_unit_for_claim(unit)
         lo, hi = layers
         frac = (hi - lo) / self.cost.cfg.num_layers
-        bw = self._bw(plan.request_id, bandwidth)
+        bw = self._bw(plan.request_id, bandwidth) / max(slowdown, 1e-12)
         t0, t1 = tokens
         io_secs = (t1 - t0) * self.cost.bytes_per_token() * frac / bw
         if plan.strategy == "token":
@@ -249,7 +272,10 @@ class RealBackend(EngineBackend):
         rids = [r.request_id for r in reqs]
         if self.dur_fn is not None:
             self.executor.decode_step_batch(rids)
-            op = ScheduledOp("decode", rids[0], -1, 0, (0, 0), (0, 0))
+            # the op carries the FULL participant list: a synthetic duration
+            # may depend on batch composition (CostModel.t_decode_step does)
+            op = ScheduledOp("decode", rids[0], -1, 0, (0, len(rids)), (0, 0),
+                             batch=tuple(rids))
             return max(1e-12, float(self.dur_fn(op)))
         import jax
         t0 = time.perf_counter()
@@ -257,6 +283,14 @@ class RealBackend(EngineBackend):
         jax.block_until_ready(
             [jax.tree.leaves(self.executor.live_cache(r)) for r in rids])
         return max(1e-12, time.perf_counter() - t0)
+
+    def suspend(self, req: EngineRequest) -> None:
+        # park the partially-restored cache off-device; finalize_restore
+        # (recurrent-state fix-up) must NOT run — restoration is incomplete
+        self.executor.suspend_restore(req.request_id)
+
+    def resume(self, req: EngineRequest) -> None:
+        self.executor.resume_restore(req.request_id)
 
     def restore_done(self, req: EngineRequest) -> None:
         # verify BEFORE prefill/decode append to the restored cache
@@ -278,7 +312,26 @@ class EngineCore:
     activations.  max_active is the continuous-batching admission cap
     (0 = unlimited).  kvstore, when given, supplies per-request I/O bandwidth
     at dispatch time and gets ``touch``/``promote`` callbacks as requests are
-    admitted / finish restoring."""
+    admitted / finish restoring.
+
+    preempt is the admission-pressure policy when ``max_active`` is full:
+
+      * "none"     — FCFS queueing (classic behavior): arrivals wait.
+      * "priority" — an arrival with strictly higher ``priority`` than some
+        still-RESTORING active request suspends the eligible victim with the
+        SMALLEST remaining restoration (least marginal recompute saving —
+        the dual of the §3.3 dispatch key) and takes its slot.
+      * "deadline" — same, but eligibility is an earlier first-token
+        ``deadline`` than the victim's (EDF).
+
+    Suspension releases both pointers' claims (in-flight ops abort; their
+    time is excluded from utilization) and parks the partially-restored
+    cache; a freed slot re-admits the most urgent of {suspended, queued}
+    and a resumed request continues from its completed units — restored
+    exactly once, never restarted.  Only RESTORING-phase requests are
+    preemptible: prefill/decode work is never rescinded."""
+
+    PREEMPT_POLICIES = ("none", "priority", "deadline")
 
     def __init__(self, backend: EngineBackend, *, stages: int = 1,
                  io_channels: int = 1, io_policy: str = "longest_remaining",
@@ -286,7 +339,10 @@ class EngineCore:
                  channel_fail_at: Optional[Dict[int, float]] = None,
                  stage_parallel: bool = True, max_active: int = 0,
                  kvstore=None, promote_tier: str = "host",
-                 strict: bool = False):
+                 preempt: str = "none", strict: bool = False):
+        if preempt not in self.PREEMPT_POLICIES:
+            raise ValueError(f"unknown preempt policy {preempt!r}; "
+                             f"known: {self.PREEMPT_POLICIES}")
         self.backend = backend
         self.stages = stages
         self.io_channels = io_channels
@@ -297,6 +353,7 @@ class EngineCore:
         self.max_active = max_active
         self.kvstore = kvstore
         self.promote_tier = promote_tier
+        self.preempt = preempt
         self.strict = strict
 
     def _bandwidth(self, rid: str) -> Optional[float]:
@@ -318,9 +375,15 @@ class EngineCore:
             requests = [r for r in requests if r.plans]
 
         now = 0.0
+        # the candidate channel's duration multiplier, set by the dispatch
+        # loop before each next_io() pass so the benefit gate prices the
+        # transfer at the channel it would actually ride (a 10x-degraded
+        # channel must not pass a full-bandwidth gate)
+        gate_slowdown = [1.0]
 
         def benefit(p: RequestPlan, u: int) -> bool:
-            ok = self.backend.io_benefit(p, u, self._bandwidth(p.request_id))
+            ok = self.backend.io_benefit(p, u, self._bandwidth(p.request_id),
+                                         slowdown=gate_slowdown[0])
             if trace is not None:
                 trace.record_gate(now, p.request_id, p.stage, u, ok)
             return ok
@@ -352,6 +415,15 @@ class EngineCore:
         reqs: Dict[str, EngineRequest] = {}
         pending: "deque[EngineRequest]" = deque()
         active: set = set()
+        # preemption state: suspended requests (insertion-ordered), per-rid
+        # preempt counts, the ops currently occupying a resource (rid ->
+        # [op, resource, dur, ops_log index]) and the identities of
+        # dispatched ops whose completion must be treated as an abort
+        # (claim already released; resource frees, pointers do not move)
+        suspended: Dict[str, EngineRequest] = {}
+        preemptions: Dict[str, int] = {}
+        outstanding: Dict[str, List[list]] = {}
+        aborted_ids: set = set()
 
         def stage_unblocked(op_stage: int, rid: str) -> bool:
             if self.stage_parallel:
@@ -379,7 +451,7 @@ class EngineCore:
                     if op.kind == "compute" and \
                             not stage_unblocked(op.stage, op.request_id):
                         # release the claim; retry when upstream finishes
-                        sched.plans[(op.request_id, op.stage)].plan.comp_inflight = None
+                        sched.plans[(op.request_id, op.stage)].plan.release_compute()
                         blocked.add((op.request_id, op.stage))
                         continue
                     r = reqs[op.request_id]
@@ -392,20 +464,25 @@ class EngineCore:
                         desc = f"{op.request_id}:c{op.unit}"
                     comp_free[s] = False
                     busy_comp[s] += dur
+                    log_idx = len(ops_log)
                     ops_log.append((now, now + dur, f"comp{s}", desc))
+                    outstanding.setdefault(op.request_id, []).append(
+                        [op, f"comp{s}", dur, log_idx])
                     if trace is not None:
                         trace.record_dispatch(now, f"comp{s}", op, dur, None)
-                    heapq.heappush(events, (now + dur, next(counter), "comp_done", (s, op)))
+                    heapq.heappush(events, (now + dur, next(counter),
+                                            "comp_done", (s, op, dur)))
             # shared I/O channels (stage blockage is channel-independent, so
             # one skip set covers the whole pass)
             io_blocked: set = set()
             for c in range(self.io_channels):
+                gate_slowdown[0] = self.slow.get(c, 1.0)
                 while io_free[c] and c not in failed:
                     op = sched.next_io(skip=io_blocked)
                     if op is None:
                         break
                     if not stage_unblocked(op.stage, op.request_id):
-                        sched.plans[(op.request_id, op.stage)].plan.io_inflight = None
+                        sched.plans[(op.request_id, op.stage)].plan.release_io()
                         io_blocked.add((op.request_id, op.stage))
                         continue
                     r = reqs[op.request_id]
@@ -414,11 +491,16 @@ class EngineCore:
                     restore_start.setdefault(op.request_id, now)
                     io_free[c] = False
                     busy_io[c] += dur
+                    log_idx = len(ops_log)
                     ops_log.append((now, now + dur, f"io{c}",
                                     f"{op.request_id}:l{op.unit}"))
+                    outstanding.setdefault(op.request_id, []).append(
+                        [op, f"io{c}", dur, log_idx])
                     if trace is not None:
                         trace.record_dispatch(now, f"io{c}", op, dur, bw)
-                    heapq.heappush(events, (now + dur, next(counter), "io_done", (c, op)))
+                    heapq.heappush(events, (now + dur, next(counter),
+                                            "io_done", (c, op, dur)))
+            gate_slowdown[0] = 1.0
             # the decode-batch resource: one recurring step over EVERY
             # decode-phase request (continuous batching), one token each
             if decode_free and decoding:
@@ -442,6 +524,87 @@ class EngineCore:
             if self.kvstore is not None:
                 self.kvstore.touch(r.request_id)
 
+        def urgency(r: EngineRequest):
+            """Admission order under a preemption policy: most urgent first."""
+            if self.preempt == "deadline":
+                return (r.deadline, r.arrival)
+            return (-r.priority, r.arrival)
+
+        def suspend(vid: str):
+            """Preempt a RESTORING request: abort its in-flight ops (their
+            time becomes waste, not utilization), release every claim, park
+            the cache, and free the admission slot."""
+            active.discard(vid)
+            suspended[vid] = reqs[vid]
+            preemptions[vid] = preemptions.get(vid, 0) + 1
+            for op, resource, dur, log_idx in outstanding.pop(vid, []):
+                # the resource stays physically occupied until the op's
+                # completion event fires; completion then frees it WITHOUT
+                # advancing pointers (the claim is released right here)
+                aborted_ids.add(id(op))
+                if resource.startswith("io"):
+                    busy_io[int(resource[2:])] -= dur
+                else:
+                    busy_comp[int(resource[4:])] -= dur
+                t0, t1, rn, desc = ops_log[log_idx]
+                ops_log[log_idx] = (t0, t1, rn, desc + ":aborted")
+            sched.preempt(vid)
+            self.backend.suspend(reqs[vid])
+            if trace is not None:
+                trace.record_preempt(now, vid)
+
+        def resume(rid: str):
+            """Re-admit a suspended request with all completed units intact."""
+            r = suspended.pop(rid)
+            active.add(rid)
+            sched.resume(rid)
+            self.backend.resume(r)
+            if trace is not None:
+                trace.record_resume(now, rid)
+            if self.kvstore is not None:
+                self.kvstore.touch(rid)
+
+        def try_preempt(r: EngineRequest) -> bool:
+            """Admission pressure: can arrival ``r`` take a slot by
+            suspending a strictly less urgent, still-RESTORING request?
+            Victim = eligible request with the smallest remaining
+            restoration benefit (least recompute saving lost by pausing)."""
+            victims = []
+            for vid in active:
+                if vid in restore_finish:
+                    continue          # prefill/decode work is never rescinded
+                v = reqs[vid]
+                if self.preempt == "priority" and r.priority <= v.priority:
+                    continue
+                if self.preempt == "deadline" and r.deadline >= v.deadline:
+                    continue
+                victims.append((sched.remaining_restoration(vid),
+                                -sched.arrival_index[vid], vid))
+            if not victims:
+                return False
+            suspend(min(victims)[2])
+            return True
+
+        def refill():
+            """A slot freed: re-admit the most urgent of {suspended, queued}.
+            preempt="none" keeps the classic FCFS deque behavior."""
+            while pending or suspended:
+                if self.max_active and len(active) >= self.max_active:
+                    return
+                if self.preempt == "none":
+                    if not pending:
+                        return
+                    admit(pending.popleft())
+                    continue
+                best_s = min(suspended.values(), key=urgency, default=None)
+                best_p = min(pending, key=urgency, default=None)
+                if best_s is not None and (
+                        best_p is None or urgency(best_s) <= urgency(best_p)):
+                    resume(best_s.request_id)
+                else:
+                    pending.remove(best_p)
+                    admit(best_p)
+
         def finish_request(rid: str):
             """Lifecycle complete: free the admission slot (continuous
             batching frees capacity at DECODE completion, not restore)."""
@@ -450,9 +613,7 @@ class EngineCore:
             self.backend.request_done(reqs[rid])
             if trace is not None:
                 trace.record_finish(now, rid)
-            while pending and (not self.max_active
-                               or len(active) < self.max_active):
-                admit(pending.popleft())
+            refill()
 
         def enter_decode(rid: str):
             """Transition out of PREFILL (or RESTORING when new_len == 0):
@@ -479,37 +640,71 @@ class EngineCore:
             else:
                 enter_decode(rid)
 
+        def unregister(rid: str, op) -> Optional[list]:
+            recs = outstanding.get(rid, ())
+            for i, rec in enumerate(recs):
+                if rec[0] is op:
+                    del recs[i]
+                    return rec
+            return None
+
         while events:
             now, _, kind, payload = heapq.heappop(events)
             if kind == "arrive":
                 r: EngineRequest = payload
                 if self.max_active and len(active) >= self.max_active:
-                    pending.append(r)
+                    if self.preempt != "none" and try_preempt(r):
+                        admit(r)
+                    else:
+                        pending.append(r)
                 else:
                     admit(r)
             elif kind == "comp_done":
-                s, op = payload
+                s, op, dur = payload
                 comp_free[s] = True
-                sched.complete(op)
-                if trace is not None:
-                    trace.record_complete(now, f"comp{s}", op)
-                if op.kind == "prefill" and sched.prefill_done(op.request_id):
-                    # last pipeline stage of the suffix done -> first token
-                    first_token[op.request_id] = now
-                    enter_decode(op.request_id)
+                if id(op) in aborted_ids:
+                    # op of a preempted request: the kernel's time is already
+                    # rolled back and the claim released; just free the stage
+                    aborted_ids.discard(id(op))
+                    if trace is not None:
+                        trace.record_abort(now, f"comp{s}", op)
+                else:
+                    unregister(op.request_id, op)
+                    restored = sched.complete(op)
+                    if trace is not None:
+                        trace.record_complete(now, f"comp{s}", op)
+                    if op.kind == "prefill" and sched.prefill_done(op.request_id):
+                        # last pipeline stage of the suffix done -> first token
+                        first_token[op.request_id] = now
+                        enter_decode(op.request_id)
+                    elif restored is not None:
+                        on_restored(restored)
             elif kind == "io_done":
-                c, op = payload
+                c, op, dur = payload
                 io_free[c] = True
-                if c in failed:
-                    # transfer was aborted: release the claim, it reschedules
+                if id(op) in aborted_ids:
+                    aborted_ids.discard(id(op))
+                    if trace is not None:
+                        trace.record_abort(now, f"io{c}", op)
+                elif c in failed:
+                    # transfer died with its channel: release the claim (it
+                    # reschedules), do NOT count the dead time as useful I/O
+                    rec = unregister(op.request_id, op)
                     p = sched.plans[(op.request_id, op.stage)]
-                    p.plan.io_inflight = None
+                    p.plan.release_io()
+                    busy_io[c] -= dur
+                    if rec is not None:
+                        t0, t1, rn, desc = ops_log[rec[3]]
+                        ops_log[rec[3]] = (t0, t1, rn, desc + ":aborted")
                     if trace is not None:
                         trace.record_abort(now, f"io{c}", op)
                 else:
-                    sched.complete(op)
+                    unregister(op.request_id, op)
+                    restored = sched.complete(op)
                     if trace is not None:
                         trace.record_complete(now, f"io{c}", op)
+                    if restored is not None:
+                        on_restored(restored)
             elif kind == "fail":
                 failed.add(payload)
                 if trace is not None:
@@ -524,14 +719,11 @@ class EngineCore:
                     if decoding[rid] <= 0:
                         del decoding[rid]
                         finish_request(rid)
-            # restoration completions -> phase transition
-            for rid in list(active):
-                if rid not in restore_finish and sched.request_done(rid):
-                    on_restored(rid)
             dispatch()
 
-        if self.strict and (pending or active):
-            unfinished = sorted(active) + [r.request_id for r in pending]
+        if self.strict and (pending or active or suspended):
+            unfinished = sorted(active) + sorted(suspended) \
+                + [r.request_id for r in pending]
             raise RuntimeError(
                 f"engine core stalled before completion: {unfinished}")
 
@@ -547,6 +739,7 @@ class EngineCore:
             decode_busy=busy_decode / makespan,
             decode_steps=decode_steps,
             ops_log=ops_log,
+            preemptions=preemptions,
         )
         if trace is not None:
             trace.finish(result)
@@ -566,6 +759,7 @@ class EngineCore:
             "stage_parallel": self.stage_parallel,
             "max_active": self.max_active,
             "promote_tier": self.promote_tier,
+            "preempt": self.preempt,
         }
 
 

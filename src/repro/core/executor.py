@@ -24,7 +24,7 @@ import numpy as np
 from repro.core.boundary import BoundaryStore, StoredRequest, stage_bounds
 from repro.core.plans import RequestPlan, make_request_plans
 from repro.core.scheduler import ScheduledOp
-from repro.models.kvcache import grow_cache
+from repro.models.kvcache import grow_cache, park_cache, unpark_cache
 from repro.models.model import Model
 
 ATTN_FIELDS = ("k", "v", "ckv")
@@ -158,15 +158,23 @@ class RestorationExecutor:
             for i in range(lo, hi):
                 x, cache = m.layer_chunk(self.params, i, x, pos, cache)
         else:
-            # layer-wise: maintain the running full-prefix activation
-            key = ("act", op.stage)
-            if key not in live["act"]:
-                live["act"][key] = self._stage_input(op.request_id, op.stage,
-                                                     0, plan.n_tokens)
-            x = live["act"][key]
+            # layer-wise: the full-prefix activation ENTERING each unit is
+            # snapshotted per unit (not a single running value) so an op
+            # aborted by preemption after it already ran re-executes from
+            # the same input — idempotent for any abort/resume interleaving.
+            # Only the last two snapshots are live: unit u-1 can never run
+            # again once unit u dispatches (its completion is permanent).
+            acts = live["act"]
+            key = (op.stage, op.unit)
+            if key not in acts:
+                assert op.unit == 0, key
+                acts[key] = self._stage_input(op.request_id, op.stage,
+                                              0, plan.n_tokens)
+            x = acts[key]
             for i in range(lo, hi):
                 x, cache = m.layer_chunk(self.params, i, x, pos, cache)
-            live["act"][key] = x
+            acts[(op.stage, op.unit + 1)] = x
+            acts.pop((op.stage, op.unit - 1), None)
         live["cache"] = cache
 
     # -- load --------------------------------------------------------------
@@ -288,6 +296,30 @@ class RestorationExecutor:
         req = self.store.get(rid)
         core.run([EngineRequest(rid, req.n_tokens, 0.0, plans)])
         return self._live[rid]["cache"]
+
+    # ------------------------------------------------------------------
+    # Preemption: park / unpark an in-flight restoration
+    # ------------------------------------------------------------------
+    def suspend_restore(self, rid: str):
+        """Park a preempted request's restoration state: the partially
+        restored cache and layer-strategy boundary activations move to host
+        buffers so a suspended request stops pinning device memory while it
+        waits for a slot.  ``finalize_restore`` (recurrent-state fix-up) is
+        deliberately NOT run — restoration is incomplete and will continue,
+        not restart, on resume."""
+        live = self._live[rid]
+        live["cache"] = park_cache(live["cache"])
+        live["act"] = {k: np.asarray(v) for k, v in live["act"].items()}
+        live["parked"] = True
+
+    def resume_restore(self, rid: str):
+        """Inverse of :meth:`suspend_restore`: the parked state returns to
+        device exactly as suspended; released plan units re-execute
+        idempotently on top of it."""
+        live = self._live[rid]
+        live["cache"] = unpark_cache(live["cache"])
+        live["act"] = {k: jnp.asarray(v) for k, v in live["act"].items()}
+        live.pop("parked", None)
 
     def finalize_restore(self, rid: str):
         """Recurrent-state fix-up for token-wise plans on hybrid archs: the

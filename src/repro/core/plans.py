@@ -17,6 +17,13 @@ scheduler's job. Invariants (property-tested):
   * compute and I/O never claim the same unit,
   * every unit is restored exactly once,
   * done ⇔ all units restored.
+
+Claims are *releasable*: ``release_compute``/``release_io``/
+``release_claims`` return an in-flight unit to the claimable pool without
+advancing any pointer, so an aborted transfer (channel failure) or a
+preempted request reschedules the exact same unit later — completion
+counters never move on release, which is what keeps "every unit restored
+exactly once" true across abort/preempt/resume cycles.
 """
 from __future__ import annotations
 
@@ -52,6 +59,11 @@ class TwoPointerPlan:
         if (not self.comp_enabled or self.comp_inflight is not None
                 or self.comp_next > self.io_next):
             return None
+        # never claim the unit I/O is currently transferring (symmetric to
+        # claim_io's guard): when the pointers meet on unit u with the
+        # transfer still in flight, claiming u here would restore it twice
+        if self.io_inflight is not None and self.comp_next >= self.io_inflight:
+            return None
         self.comp_inflight = self.comp_next
         return self.comp_next
 
@@ -64,6 +76,24 @@ class TwoPointerPlan:
             return None
         self.io_inflight = self.io_next
         return self.io_next
+
+    # -- releases (abort / preempt) -------------------------------------
+    def release_compute(self):
+        """Return the in-flight compute claim (if any) to the pool.  The
+        pointer does not advance: the unit is claimed again verbatim on the
+        next ``claim_compute``."""
+        self.comp_inflight = None
+
+    def release_io(self):
+        """Return the in-flight I/O claim (if any) to the pool (aborted
+        transfer / preemption); the unit reschedules idempotently."""
+        self.io_inflight = None
+
+    def release_claims(self):
+        """Suspend: release BOTH pointers' claims.  Completed units are
+        untouched, so a preempted plan resumes exactly where it left off."""
+        self.release_compute()
+        self.release_io()
 
     # -- completions ----------------------------------------------------
     def complete_compute(self, unit: int):

@@ -41,6 +41,11 @@ class ScheduledOp:
     unit: int
     tokens: Tuple[int, int]
     layers: Tuple[int, int]
+    # decode steps only: the FULL participant list (arrival order), so
+    # synthetic duration functions / per-op hooks see the true batch
+    # composition instead of a fabricated batch of one (request_id is the
+    # first participant for backward compatibility)
+    batch: Tuple[str, ...] = ()
 
 
 @dataclass
@@ -61,11 +66,13 @@ class BatchScheduler:
     # avoids more recomputation time than the transfer costs. None = eager.
     benefit_fn: object = None      # Callable[[RequestPlan, int], bool]
     plans: Dict[Tuple[str, int], RequestPlan] = field(default_factory=dict)
-    arrival_order: List[str] = field(default_factory=list)
     # O(1) indexes so dispatch stays near O(B log B) at large batch sizes:
-    # arrival sequence number per request (sort key), plans bucketed by
-    # stage (compute dispatch) and by request (request_done).
+    # arrival sequence number per request (sort key + membership), plans
+    # bucketed by stage (compute dispatch) and by request (request_done).
     arrival_index: Dict[str, int] = field(default_factory=dict)
+    # requests preempted mid-restoration: claims released, no candidates
+    # generated until resume() (engine-core preemption policy drives this)
+    suspended: set = field(default_factory=set)
     _by_stage: Dict[int, "Dict[str, RequestPlan]"] = field(default_factory=dict)
     _by_rid: Dict[str, List[RequestPlan]] = field(default_factory=dict)
     _arrival_seq: int = 0
@@ -86,7 +93,6 @@ class BatchScheduler:
     def add_request(self, plans: List[RequestPlan]):
         rid = plans[0].request_id
         if rid not in self.arrival_index:
-            self.arrival_order.append(rid)
             self.arrival_index[rid] = self._arrival_seq
             heapq.heappush(self._head_heap, (self._arrival_seq, rid))
             self._arrival_seq += 1
@@ -96,9 +102,11 @@ class BatchScheduler:
             self._by_stage.setdefault(p.stage, {})[rid] = p
 
     def remove_request(self, rid: str):
-        self.arrival_order = [r for r in self.arrival_order if r != rid]
-        self.arrival_index.pop(rid, None)       # head heap skips it lazily
+        # O(stages): every index is a dict/set keyed by rid (the head heap
+        # drops its entry lazily on peek)
+        self.arrival_index.pop(rid, None)
         self._restored.discard(rid)
+        self.suspended.discard(rid)
         self._prefill.pop(rid, None)
         self._prefill_finished.discard(rid)
         for p in self._by_rid.pop(rid, []):
@@ -122,12 +130,43 @@ class BatchScheduler:
     def all_done(self) -> bool:
         return all(p.plan.done for p in self.plans.values())
 
+    def remaining_restoration(self, rid: str) -> int:
+        """Tokens' worth of KV still to restore across every stage plan —
+        the request's remaining marginal recompute saving (§3.3).  The
+        engine's preemption policy suspends the active request where this is
+        SMALLEST (the dual of the largest-remaining dispatch key)."""
+        return sum(p.remaining_io_tokens() for p in self._by_rid.get(rid, ()))
+
+    # ------------------------------------------------------------------
+    # Preempt / resume (engine-core admission pressure)
+    # ------------------------------------------------------------------
+    def preempt(self, rid: str):
+        """Suspend a restoring request: release BOTH pointers' claims on
+        every stage plan (the released units become claimable again — the
+        plan state machine makes re-execution idempotent) and stop
+        generating candidates for it until :meth:`resume`.  Completed units
+        are untouched, so resumption continues rather than restarts."""
+        self.suspended.add(rid)
+        for p in self._by_rid.get(rid, ()):
+            p.plan.release_claims()
+
+    def resume(self, rid: str):
+        """Re-admit a suspended request: it competes for resources again
+        from exactly the plan state it was suspended with."""
+        self.suspended.discard(rid)
+        if rid in self.arrival_index and rid not in self._restored:
+            # the head heap may have lazily dropped its entry while it was
+            # suspended; re-push (duplicates are harmless — lazy skip)
+            heapq.heappush(self._head_heap, (self.arrival_index[rid], rid))
+
     def _restoration_head(self) -> Optional[str]:
         """Oldest admitted request still restoring — O(log B) amortized via
-        the lazy heap (entries for restored/removed requests pop on peek)."""
+        the lazy heap (entries for restored/removed/suspended requests drop
+        on peek; ``resume`` re-pushes its entry)."""
         h = self._head_heap
         while h and (h[0][1] in self._restored
-                     or h[0][1] not in self.arrival_index):
+                     or h[0][1] not in self.arrival_index
+                     or h[0][1] in self.suspended):
             heapq.heappop(h)
         return h[0][1] if h else None
 
@@ -149,7 +188,7 @@ class BatchScheduler:
     def _prefill_candidate(self, stage: int, skip) -> Optional[str]:
         best = None
         for rid, st in self._prefill.items():
-            if st.inflight:
+            if st.inflight or rid in self.suspended:
                 continue
             if st.stages[st.next_idx][0] != stage or (rid, stage) in skip:
                 continue
@@ -174,7 +213,8 @@ class BatchScheduler:
         immediately re-taken."""
         cands = [p for p in self.plans.values()
                  if (stage is None or p.stage == stage)
-                 and (p.request_id, p.stage) not in skip]
+                 and (p.request_id, p.stage) not in skip
+                 and p.request_id not in self.suspended]
         cands = [p for p in cands
                  if p.plan.io_enabled
                  and not p.plan.done and p.plan.io_inflight is None
@@ -225,9 +265,12 @@ class BatchScheduler:
                      ) -> Optional[ScheduledOp]:
         plans = [p for p in self._stage_plans(stage)
                  if (p.request_id, p.stage) not in skip
+                 and p.request_id not in self.suspended
                  and p.plan.comp_enabled
                  and not p.plan.done and p.plan.comp_inflight is None
-                 and p.plan.comp_next <= p.plan.io_next]
+                 and p.plan.comp_next <= p.plan.io_next
+                 and not (p.plan.io_inflight is not None
+                          and p.plan.comp_next >= p.plan.io_inflight)]
         prefill = self._prefill_candidate(stage, skip)
         if not plans:
             return self._claim_prefill(prefill) if prefill is not None else None
@@ -256,7 +299,11 @@ class BatchScheduler:
         return ScheduledOp("compute", p.request_id, p.stage, unit, tokens, layers)
 
     # ------------------------------------------------------------------
-    def complete(self, op: ScheduledOp):
+    def complete(self, op: ScheduledOp) -> Optional[str]:
+        """Advance the op's pointer.  Returns the request id iff THIS
+        completion finished the request's restoration (all stage plans
+        done) — the engine transitions exactly that request's phase instead
+        of rescanning the whole active batch per event."""
         if op.kind == "prefill":
             st = self._prefill[op.request_id]
             st.inflight = False
@@ -265,7 +312,7 @@ class BatchScheduler:
                 # pipeline finished: prune so it stops costing candidate scans
                 del self._prefill[op.request_id]
                 self._prefill_finished.add(op.request_id)
-            return
+            return None
         p = self.plans[(op.request_id, op.stage)]
         if op.kind == "compute":
             p.plan.complete_compute(op.unit)
@@ -275,3 +322,5 @@ class BatchScheduler:
         if p.plan.done and op.request_id not in self._restored \
                 and all(q.plan.done for q in self._by_rid[op.request_id]):
             self._restored.add(op.request_id)
+            return op.request_id
+        return None

@@ -38,10 +38,18 @@ every batched decode step is a ``decode_step`` event with its participant
 list and pinned duration; ``finish`` marks lifecycle completion.  v1
 (restoration-only) traces load by upgrade — their lifecycle extents are
 zero, so replay reproduces the old restore-and-stop behavior exactly.
+
+Schema v3 adds preemption (DESIGN.md §9): requests carry their SLO class
+(``priority``/``deadline``), meta carries the ``preempt`` policy, and
+``preempt``/``resume`` events mark restorations suspended under admission
+pressure.  Replay does not pin those decisions — they re-derive
+deterministically from the pinned durations and recorded priorities, and
+the bit-identity check covers ``EngineResult.preemptions``.
 """
 from __future__ import annotations
 
 import json
+import math
 from dataclasses import asdict, dataclass, field
 from typing import Dict, List, Optional
 
@@ -59,7 +67,13 @@ from repro.core.scheduler import ScheduledOp
 #:   2 — full request lifecycle: requests carry ``new_len``/``decode_len``;
 #:       ``dispatch`` events may carry ``prefill`` ops; new ``decode_step``
 #:       (batched decode, pinned duration) and ``finish`` events.
-TRACE_VERSION = 2
+#:   3 — preemption: requests carry ``priority``/``deadline`` (omitted when
+#:       default), meta carries the ``preempt`` policy, and new ``preempt``/
+#:       ``resume`` events mark restorations suspended/re-admitted under
+#:       admission pressure; the result carries ``preemptions``.  v2 traces
+#:       load by upgrading — no priorities and preempt="none" reproduce the
+#:       FCFS-only admission exactly, so replay is unchanged.
+TRACE_VERSION = 3
 
 
 class TraceVersionError(ValueError):
@@ -79,9 +93,11 @@ class ReplayDivergence(RuntimeError):
 @dataclass
 class TraceEvent:
     """One engine-core decision.  ``kind`` ∈ {admit, gate, dispatch,
-    complete, abort, fail, done, decode_step, finish}; unused fields stay
-    None (and are dropped from the JSON form).  ``done`` marks restoration
-    complete; ``finish`` marks the whole lifecycle complete (slot freed)."""
+    complete, abort, fail, done, decode_step, finish, preempt, resume};
+    unused fields stay None (and are dropped from the JSON form).  ``done``
+    marks restoration complete; ``finish`` marks the whole lifecycle
+    complete (slot freed); ``preempt``/``resume`` mark a restoration
+    suspended under admission pressure / re-admitted to a freed slot."""
     kind: str
     t: float
     resource: Optional[str] = None       # dispatch/complete/abort: comp{s}|io{c}
@@ -136,7 +152,8 @@ def result_to_dict(res: EngineResult) -> dict:
             "io_busy": res.io_busy,
             "decode_busy": res.decode_busy,
             "decode_steps": res.decode_steps,
-            "ops_log": [list(e) for e in res.ops_log]}
+            "ops_log": [list(e) for e in res.ops_log],
+            "preemptions": dict(res.preemptions)}
 
 
 def result_from_dict(d: dict) -> EngineResult:
@@ -152,7 +169,8 @@ def result_from_dict(d: dict) -> EngineResult:
         io_busy=d["io_busy"],
         decode_busy=d.get("decode_busy", 0.0),
         decode_steps=d.get("decode_steps", 0),
-        ops_log=[tuple(e) for e in d["ops_log"]])
+        ops_log=[tuple(e) for e in d["ops_log"]],
+        preemptions=dict(d.get("preemptions") or {}))
 
 
 @dataclass
@@ -184,12 +202,20 @@ class ScheduleTrace:
     def captured_result(self) -> Optional[EngineResult]:
         return result_from_dict(self.result) if self.result else None
 
+    def preempts(self) -> List[TraceEvent]:
+        return [e for e in self.events if e.kind == "preempt"]
+
+    def resumes(self) -> List[TraceEvent]:
+        return [e for e in self.events if e.kind == "resume"]
+
     def rebuild_requests(self) -> List[EngineRequest]:
         """Fresh EngineRequests (pointers at origin) from the recorded specs."""
         return [EngineRequest(r["request_id"], r["n_tokens"], r["arrival"],
                               [plan_from_dict(p) for p in r["plans"]],
                               new_len=r.get("new_len", 0),
-                              decode_len=r.get("decode_len", 0))
+                              decode_len=r.get("decode_len", 0),
+                              priority=r.get("priority", 0),
+                              deadline=r.get("deadline", math.inf))
                 for r in self.requests]
 
     # -- serialization --------------------------------------------------
@@ -205,13 +231,15 @@ class ScheduleTrace:
         if version is None:
             raise TraceVersionError(
                 "trace has no schema version; refusing to guess its format")
-        if version not in (1, TRACE_VERSION):
+        if version not in (1, 2, TRACE_VERSION):
             raise TraceVersionError(
                 f"unsupported trace schema version {version}; this loader "
-                f"reads versions 1 (upgraded) and {TRACE_VERSION}")
-        # v1 (pre-lifecycle) traces upgrade implicitly: rebuild_requests and
-        # result_from_dict default the missing lifecycle extents/fields to
-        # zero, so replay collapses to RESTORING -> DONE exactly as v1 ran
+                f"reads versions 1-2 (upgraded) and {TRACE_VERSION}")
+        # v1 (pre-lifecycle) and v2 (pre-preemption) traces upgrade
+        # implicitly: rebuild_requests and result_from_dict default the
+        # missing lifecycle extents / priorities / preemption fields, and a
+        # missing meta "preempt" key replays as "none" — so v1 collapses to
+        # RESTORING -> DONE and v2 keeps its exact FCFS-only admission
         fail_at = d["meta"].get("channel_fail_at") or {}
         meta = dict(d["meta"])
         # JSON stringifies int dict keys; coerce them back
@@ -255,13 +283,19 @@ class TraceRecorder:
         self.trace: Optional[ScheduleTrace] = None
 
     def begin(self, meta: dict, requests: List[EngineRequest]):
-        self.trace = ScheduleTrace(
-            meta=meta,
-            requests=[{"request_id": r.request_id, "n_tokens": r.n_tokens,
-                       "arrival": r.arrival,
-                       "new_len": r.new_len, "decode_len": r.decode_len,
-                       "plans": [plan_to_dict(p) for p in r.plans]}
-                      for r in requests])
+        def req_dict(r: EngineRequest) -> dict:
+            d = {"request_id": r.request_id, "n_tokens": r.n_tokens,
+                 "arrival": r.arrival,
+                 "new_len": r.new_len, "decode_len": r.decode_len,
+                 "plans": [plan_to_dict(p) for p in r.plans]}
+            if r.priority:
+                d["priority"] = r.priority
+            if math.isfinite(r.deadline):    # inf is not strict JSON
+                d["deadline"] = r.deadline
+            return d
+
+        self.trace = ScheduleTrace(meta=meta,
+                                   requests=[req_dict(r) for r in requests])
 
     def _ev(self, **kw):
         self.trace.events.append(TraceEvent(**kw))
@@ -297,6 +331,12 @@ class TraceRecorder:
 
     def record_finish(self, t: float, rid: str):
         self._ev(kind="finish", t=t, request_id=rid)
+
+    def record_preempt(self, t: float, rid: str):
+        self._ev(kind="preempt", t=t, request_id=rid)
+
+    def record_resume(self, t: float, rid: str):
+        self._ev(kind="resume", t=t, request_id=rid)
 
     def finish(self, result: EngineResult):
         self.trace.result = result_to_dict(result)
@@ -388,8 +428,18 @@ class ReplayBackend(EngineBackend):
             self.executor.decode_step_batch(rids)
         return e.duration
 
+    def suspend(self, req: EngineRequest) -> None:
+        # real replay must park/unpark exactly as the capture did so that
+        # re-executed (previously aborted) ops see a live, unparked cache
+        if self.executor is not None:
+            self.executor.suspend_restore(req.request_id)
+
+    def resume(self, req: EngineRequest) -> None:
+        if self.executor is not None:
+            self.executor.resume_restore(req.request_id)
+
     def io_benefit(self, plan: RequestPlan, unit: int,
-                   bandwidth: Optional[float]) -> bool:
+                   bandwidth: Optional[float], slowdown: float = 1.0) -> bool:
         if self._gi >= len(self._gates):
             raise ReplayDivergence(
                 f"replay gate query ({plan.request_id}, stage {plan.stage}, "
@@ -438,7 +488,7 @@ def replay_core(trace: ScheduleTrace, backend: EngineBackend,
         io_policy=m["io_policy"],
         channel_fail_at=dict(m.get("channel_fail_at") or {}),
         stage_parallel=m["stage_parallel"], max_active=m["max_active"],
-        strict=strict)
+        preempt=m.get("preempt", "none"), strict=strict)
 
 
 def replay_trace(trace: ScheduleTrace, executor=None, *, verify: bool = False,

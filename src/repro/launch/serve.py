@@ -137,12 +137,30 @@ def main():
     ap.add_argument("--bandwidth", default="10Gbps", choices=list(IO_BANDWIDTHS))
     ap.add_argument("--hardware", default="tpu_v5e", choices=list(HARDWARE))
     ap.add_argument("--stages", type=int, default=2)
-    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-batch", "--max-active", dest="max_batch",
+                    type=int, default=8,
+                    help="continuous-batching admission cap (engine-core "
+                         "max_active); 0 = unlimited")
     ap.add_argument("--io-channels", type=int, default=1)
     ap.add_argument("--decode-len", type=int, default=-1,
                     help="output tokens per request (lifecycle decode); "
                          "-1 keeps the workload-drawn lengths (sim) or "
                          "uses 8 (real)")
+    ap.add_argument("--preempt", default="none",
+                    choices=["none", "priority", "deadline"],
+                    help="admission-pressure policy: suspend the least-"
+                         "beneficial in-flight restoration for a more "
+                         "urgent arrival (resumes on a freed slot)")
+    ap.add_argument("--burst-size", type=int, default=3,
+                    help="bursty_priority workload: urgent requests per burst")
+    ap.add_argument("--burst-every", type=float, default=4.0,
+                    help="bursty_priority workload: seconds between bursts")
+    ap.add_argument("--kv-tier", default="host",
+                    choices=["hbm", "host", "remote"],
+                    help="tier returning prefixes start in (sim): 'remote' "
+                         "models the cold disaggregated store, where "
+                         "restoration dominates and admission pressure "
+                         "(and preemption) is real")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--real", action="store_true", help="run a reduced model for real")
     ap.add_argument("--trace-out", metavar="PATH",
@@ -166,23 +184,40 @@ def main():
         eng = RealServingEngine(model, params, system=args.system,
                                 stages=min(args.stages, 2), chunk_size=16,
                                 max_batch=args.max_batch,
-                                io_channels=args.io_channels)
+                                io_channels=args.io_channels,
+                                preempt=args.preempt)
         decode_len = args.decode_len if args.decode_len >= 0 else 8
-        reqs = [Request(f"r{i}", 0.0, prefix_len=64 + 32 * i, new_len=16,
-                        decode_len=decode_len)
-                for i in range(args.requests)]
+        # with a preemption policy armed, stagger arrivals and mark every
+        # other request urgent so admission pressure actually exercises it;
+        # without one, keep the classic simultaneous-arrival smoke exactly
+        if args.preempt != "none":
+            reqs = [Request(f"r{i}", 0.1 * i, prefix_len=64 + 32 * i,
+                            new_len=16, decode_len=decode_len, priority=i % 2,
+                            deadline=0.1 * i + (2.0 if i % 2 else 120.0))
+                    for i in range(args.requests)]
+        else:
+            reqs = [Request(f"r{i}", 0.0, prefix_len=64 + 32 * i, new_len=16,
+                            decode_len=decode_len)
+                    for i in range(args.requests)]
         rep = eng.serve(reqs, trace=recorder)
         if recorder is not None:
             _save_trace(recorder, args.trace_out, arch=args.arch)
         print(json.dumps({"system": args.system, "mode": "real",
                           "lifecycle": rep.stats,
+                          "preemptions": sum(rep.preemptions.values()),
                           "compute_busy": round(rep.compute_busy, 3),
                           "io_busy": round(rep.io_busy, 3),
                           "decode_busy": round(rep.decode_busy, 3)}, indent=1))
         return
 
     cfg = get_config(args.arch)
-    reqs = generate(args.workload, args.requests, seed=args.seed)
+    if args.workload == "bursty_priority":
+        from repro.serving.workloads import bursty_priority
+        reqs = bursty_priority(args.requests, seed=args.seed,
+                               burst_size=args.burst_size,
+                               burst_every=args.burst_every)
+    else:
+        reqs = generate(args.workload, args.requests, seed=args.seed)
     if args.decode_len >= 0:
         for r in reqs:
             r.decode_len = args.decode_len
@@ -191,14 +226,17 @@ def main():
                            io_bandwidth=IO_BANDWIDTHS[args.bandwidth],
                            system=args.system, stages=args.stages,
                            max_batch=args.max_batch, kvstore=store,
-                           io_channels=args.io_channels)
+                           io_channels=args.io_channels,
+                           preempt=args.preempt, kv_tier=args.kv_tier)
     rep = eng.run(reqs, trace=recorder)
     if recorder is not None:
         _save_trace(recorder, args.trace_out, arch=args.arch)
     print(json.dumps({
         "system": args.system, "workload": args.workload,
         "bandwidth": args.bandwidth, "hardware": args.hardware,
-        "stages": args.stages, "lifecycle": rep.stats,
+        "stages": args.stages, "preempt": args.preempt,
+        "lifecycle": rep.stats,
+        "preemptions": sum(rep.preemptions.values()),
         "compute_busy": round(rep.compute_busy, 3),
         "io_busy": round(rep.io_busy, 3),
         "decode_busy": round(rep.decode_busy, 3)}, indent=1))

@@ -22,6 +22,7 @@ the cache stays a plain array pytree.
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import ModelConfig
 
@@ -72,6 +73,20 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -
 
 def cache_bytes(cache: dict) -> int:
     return sum(int(a.size) * a.dtype.itemsize for a in cache.values())
+
+
+def park_cache(cache: dict) -> dict:
+    """Move a (partially restored) cache off-device to host numpy buffers —
+    how a preempted restoration parks WITHOUT being finalized, so suspended
+    requests stop pinning device HBM while they wait for an admission slot.
+    Inverse: :func:`unpark_cache`."""
+    return {f: np.asarray(a) for f, a in cache.items()}
+
+
+def unpark_cache(cache: dict) -> dict:
+    """Return a parked cache to device arrays (dtypes preserved); resumed
+    restoration ops continue writing into it exactly where they left off."""
+    return {f: jnp.asarray(a) for f, a in cache.items()}
 
 
 def grow_cache(cfg: ModelConfig, cache: dict, new_len: int) -> dict:

@@ -1,4 +1,5 @@
 from repro.serving.engine import RealServingEngine, ServingReport, SimServingEngine  # noqa: F401
 from repro.serving.kvstore import TieredKVStore  # noqa: F401
 from repro.serving.request import Phase, Request  # noqa: F401
-from repro.serving.workloads import WORKLOADS, fixed_length, generate  # noqa: F401
+from repro.serving.workloads import (WORKLOADS, bursty_priority,  # noqa: F401
+                                     fixed_length, generate)

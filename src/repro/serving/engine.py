@@ -53,6 +53,7 @@ class ServingReport:
     e2e: Dict[str, float] = field(default_factory=dict)       # finish - arrival
     tpots: Dict[str, float] = field(default_factory=dict)     # per output token
     decode_busy: float = 0.0
+    preemptions: Dict[str, int] = field(default_factory=dict)  # rid -> count
 
     def __post_init__(self):
         if not self.stats:
@@ -98,7 +99,8 @@ class SimServingEngine:
                  num_chips: int = 1, chunk_size: int = 512,
                  l_delta: Optional[int] = None, max_batch: int = 0,
                  kvstore: Optional[TieredKVStore] = None,
-                 channel_slowdown=None, channel_fail_at=None):
+                 channel_slowdown=None, channel_fail_at=None,
+                 preempt: str = "none", kv_tier: str = "host"):
         self.cfg = cfg
         self.system = system
         self.stages = stages
@@ -111,6 +113,11 @@ class SimServingEngine:
         self.kvstore = kvstore
         self.channel_slowdown = channel_slowdown
         self.channel_fail_at = channel_fail_at
+        self.preempt = preempt
+        # which tier returning prefixes start in: "host" models warm reuse,
+        # "remote" the paper's cold disaggregated-store regime where
+        # restoration time (and hence admission pressure) is real
+        self.kv_tier = kv_tier
 
     def _make_core(self) -> EngineCore:
         kw = sim_kwargs(self.system)
@@ -119,7 +126,7 @@ class SimServingEngine:
             io_channels=self.io_channels, max_active=self.max_batch,
             channel_slowdown=self.channel_slowdown,
             channel_fail_at=self.channel_fail_at,
-            kvstore=self.kvstore, **kw)
+            kvstore=self.kvstore, preempt=self.preempt, **kw)
 
     def run(self, requests: List[Request], trace=None) -> ServingReport:
         """Drive every request through its whole lifecycle (restore →
@@ -138,15 +145,19 @@ class SimServingEngine:
             engine_reqs.append(EngineRequest(r.request_id, r.prefix_len,
                                              arrival=r.arrival, plans=plans,
                                              new_len=r.new_len,
-                                             decode_len=r.decode_len))
+                                             decode_len=r.decode_len,
+                                             priority=r.priority,
+                                             deadline=r.deadline))
             if self.kvstore is not None:
                 self.kvstore.put(r.request_id,
-                                 r.prefix_len * self.cfg.kv_bytes_per_token())
+                                 r.prefix_len * self.cfg.kv_bytes_per_token(),
+                                 tier=self.kv_tier)
         res = self._make_core().run(engine_reqs, trace=trace)
         ttfts, restore_secs, e2e, tpots, total = _fill_lifecycle(requests, res)
         return ServingReport(self.system, ttfts, restore_secs,
                              res.compute_busy, res.io_busy,
                              e2e=e2e, tpots=tpots, decode_busy=res.decode_busy,
+                             preemptions=dict(res.preemptions),
                              stats=lifecycle_stats(ttfts, e2e, tpots, total,
                                                    res.makespan))
 
@@ -160,7 +171,8 @@ class RealServingEngine:
     def __init__(self, model, params, *, system: str = "cacheflow",
                  stages: int = 1, chunk_size: int = 16, l_delta: int = 64,
                  seed: int = 0, io_channels: int = 1, max_batch: int = 0,
-                 kvstore: Optional[TieredKVStore] = None):
+                 kvstore: Optional[TieredKVStore] = None,
+                 preempt: str = "none"):
         self.model = model
         self.params = params
         self.system = system
@@ -170,6 +182,7 @@ class RealServingEngine:
         self.io_channels = io_channels
         self.max_batch = max_batch
         self.kvstore = kvstore
+        self.preempt = preempt
         self.executor = RestorationExecutor(model, params, chunk_size=chunk_size,
                                             stages=stages)
         self._rng = jax.random.PRNGKey(seed)
@@ -238,14 +251,16 @@ class RealServingEngine:
                                              arrival=r.arrival,
                                              plans=self._make_plans(r, bounds),
                                              new_len=r.new_len,
-                                             decode_len=r.decode_len))
+                                             decode_len=r.decode_len,
+                                             priority=r.priority,
+                                             deadline=r.deadline))
         backend = RealBackend(self.executor,
                               dur_fn=interleaving_dur_fn(op_order, rng),
                               verify=verify)
         core = EngineCore(backend, stages=self.stages,
                           io_channels=self.io_channels,
                           max_active=self.max_batch, kvstore=self.kvstore,
-                          strict=True)
+                          preempt=self.preempt, strict=True)
         t0 = time.perf_counter()
         res = core.run(engine_reqs, trace=trace)
         serve_wall = time.perf_counter() - t0
@@ -257,6 +272,7 @@ class RealServingEngine:
         return ServingReport(self.system, ttfts, restore_secs,
                              res.compute_busy, res.io_busy,
                              e2e=e2e, tpots=tpots, decode_busy=res.decode_busy,
+                             preemptions=dict(res.preemptions),
                              stats=lifecycle_stats(ttfts, e2e, tpots, total,
                                                    res.makespan)
                              | {"serve_wall": serve_wall})

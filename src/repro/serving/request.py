@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import enum
+import math
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -23,6 +24,9 @@ class Request:
     new_len: int                   # fresh suffix tokens to prefill
     decode_len: int = 32           # output tokens to generate
     prefix_id: Optional[str] = None  # shared-prefix key (agentic reuse)
+    priority: int = 0              # SLO class; higher preempts lower
+                                   # restorations under admission pressure
+    deadline: float = math.inf     # wall-clock first-token SLO (EDF mode)
     phase: Phase = Phase.QUEUED
     # timestamps (filled by the engine)
     t_restore_start: Optional[float] = None

@@ -12,6 +12,13 @@ tails beyond 20k):
     (10k–30k) reused across tool invocations (shared prefix_id), short
     tool-call suffixes.
 
+Beyond the three datasets, ``bursty_priority`` is the SLO-pressure workload
+the engine's preemption policies target: a steady background of long-prefix
+batch requests (priority 0) punctuated by bursts of short urgent
+interactive requests (priority 1, tight first-token deadlines) arriving
+together — under a ``max_active`` cap the urgent burst queues behind long
+restorations unless the engine preempts.
+
 Deterministic in the seed; arrivals are Poisson.
 """
 from __future__ import annotations
@@ -22,11 +29,14 @@ import numpy as np
 
 from repro.serving.request import Request
 
-WORKLOADS = ("lmsys_chat", "wildchat", "swe_bench")
+WORKLOADS = ("lmsys_chat", "wildchat", "swe_bench", "bursty_priority")
 
 
 def generate(workload: str, n_requests: int, *, seed: int = 0,
              arrival_rate: float = 2.0, max_len: int = 32_768) -> List[Request]:
+    if workload == "bursty_priority":
+        return bursty_priority(n_requests, seed=seed,
+                               arrival_rate=arrival_rate, max_len=max_len)
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, n_requests))
     reqs: List[Request] = []
@@ -55,6 +65,49 @@ def generate(workload: str, n_requests: int, *, seed: int = 0,
             request_id=f"{workload}-{i}", arrival=float(arrivals[i]),
             prefix_len=int(max(64, prefix[i])), new_len=int(new[i]),
             decode_len=int(rng.integers(16, 128)), prefix_id=pid[i]))
+    return reqs
+
+
+def bursty_priority(n_requests: int, *, seed: int = 0,
+                    arrival_rate: float = 2.0, max_len: int = 32_768,
+                    burst_every: float = 4.0, burst_size: int = 3,
+                    urgent_deadline: float = 2.0) -> List[Request]:
+    """Two-SLO-class admission-pressure workload (preemption target).
+
+    ~2/3 of the requests are BACKGROUND (priority 0): Poisson arrivals,
+    long lognormal prefixes (median ≈ 8k), loose deadlines.  The rest are
+    URGENT (priority 1): short prefixes (256–1k) and short turns, arriving
+    in simultaneous bursts of ``burst_size`` every ``burst_every`` seconds
+    with a ``urgent_deadline``-second first-token SLO — the short-behind-
+    long queueing pattern §3.3's batch awareness leaves on the table
+    without preemption."""
+    rng = np.random.default_rng(seed)
+    # ~1/3 urgent (at least one); the last burst may be partial so the
+    # function always returns EXACTLY n_requests requests
+    n_urgent = min(n_requests, max(1, n_requests // 3))
+    n_bg = n_requests - n_urgent
+    reqs: List[Request] = []
+    bg_arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, n_bg))
+    bg_prefix = np.minimum(rng.lognormal(np.log(8000), 0.6, n_bg), max_len)
+    for i in range(n_bg):
+        reqs.append(Request(
+            request_id=f"bg-{i}", arrival=float(bg_arrivals[i]),
+            prefix_len=int(max(2048, bg_prefix[i])),
+            new_len=int(rng.integers(32, 256)),
+            decode_len=int(rng.integers(16, 128)),
+            priority=0, deadline=float(bg_arrivals[i]) + 120.0,
+            prefix_id=f"bg-{i}"))
+    for j, start in enumerate(range(0, n_urgent, burst_size)):
+        t = burst_every * (j + 1)
+        for i in range(start, min(start + burst_size, n_urgent)):
+            reqs.append(Request(
+                request_id=f"hi-{i}", arrival=float(t),
+                prefix_len=int(rng.integers(256, 1024)),
+                new_len=int(rng.integers(16, 128)),
+                decode_len=int(rng.integers(8, 32)),
+                priority=1, deadline=float(t) + urgent_deadline,
+                prefix_id=f"hi-{i}"))
+    reqs.sort(key=lambda r: (r.arrival, r.request_id))
     return reqs
 
 

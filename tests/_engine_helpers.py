@@ -1,0 +1,24 @@
+"""Shared engine-core test backends (imported by lifecycle/preemption tests)."""
+import numpy as np
+
+from repro.core import EngineBackend
+
+
+class RngBackend(EngineBackend):
+    """Random op durations: completion order (and hence every subsequent
+    scheduling decision) is scrambled across the whole lifecycle."""
+
+    def __init__(self, seed):
+        self.rng = np.random.default_rng(seed)
+
+    def compute_secs(self, op, req):
+        return float(self.rng.uniform(0.05, 1.0))
+
+    def io_secs(self, op, req, bandwidth):
+        return float(self.rng.uniform(0.05, 1.0))
+
+    def prefill_secs(self, op, req):
+        return float(self.rng.uniform(0.05, 1.0))
+
+    def decode_secs(self, reqs):
+        return float(self.rng.uniform(0.01, 0.3))

@@ -60,9 +60,13 @@ def test_batched_real_restoration_three_requests():
     # seeded schedule durations: measured CPU timings occasionally let the
     # FIFO head run as a sequential block, making the interleaving
     # assertion below flaky; rng durations keep the schedule deterministic
-    # while the ops still execute for real on device.
+    # while the ops still execute for real on device.  Two channels make
+    # the interleaving structural: the surplus channel always prefetches a
+    # non-head request (with one channel, FCFS compute + head-first I/O
+    # legitimately drain requests as sequential blocks now that compute can
+    # no longer double-claim the unit an in-flight transfer is restoring).
     dur = interleaving_dur_fn("random", np.random.default_rng(0))
-    core = EngineCore(RealBackend(ex, dur_fn=dur), stages=1, io_channels=1,
+    core = EngineCore(RealBackend(ex, dur_fn=dur), stages=1, io_channels=2,
                       strict=True)
     res = core.run(reqs)
     assert set(res.restore_finish) == set(LENS)

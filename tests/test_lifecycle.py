@@ -23,7 +23,9 @@ from _hypothesis_compat import given, settings, st
 
 from repro.config import HARDWARE, IO_BANDWIDTHS
 from repro.configs import get_config
-from repro.core import (CostModel, EngineBackend, EngineCore, EngineRequest,
+from _engine_helpers import RngBackend
+
+from repro.core import (CostModel, EngineCore, EngineRequest,
                         RestorationExecutor, ScheduleTrace, SimBackend,
                         TraceRecorder, TraceVersionError, capture,
                         replay_trace)
@@ -102,26 +104,6 @@ def test_admission_slot_held_through_decode():
 # ---------------------------------------------------------------------------
 
 
-class _RngBackend(EngineBackend):
-    """Random op durations: completion order (and hence every subsequent
-    scheduling decision) is scrambled across the whole lifecycle."""
-
-    def __init__(self, seed):
-        self.rng = np.random.default_rng(seed)
-
-    def compute_secs(self, op, req):
-        return float(self.rng.uniform(0.05, 1.0))
-
-    def io_secs(self, op, req, bandwidth):
-        return float(self.rng.uniform(0.05, 1.0))
-
-    def prefill_secs(self, op, req):
-        return float(self.rng.uniform(0.05, 1.0))
-
-    def decode_secs(self, reqs):
-        return float(self.rng.uniform(0.01, 0.3))
-
-
 @pytest.mark.property
 @settings(max_examples=20, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1))
@@ -141,7 +123,7 @@ def test_phase_transitions_monotone(seed):
             f"r{i}", n, arrival=float(rng.uniform(0, 2.0)), plans=plans,
             new_len=int(rng.integers(0, 3)) * 16,
             decode_len=int(rng.integers(0, 6))))
-    core = EngineCore(_RngBackend(seed), stages=stages,
+    core = EngineCore(RngBackend(seed), stages=stages,
                       io_channels=int(rng.integers(1, 3)),
                       max_active=int(rng.integers(0, 4)), strict=True)
     res = core.run(reqs)
