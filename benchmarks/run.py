@@ -20,6 +20,7 @@ MODULES = [
     "benchmarks.fig8_bandwidth",
     "benchmarks.fig9_hardware",
     "benchmarks.fig10_batch",
+    "benchmarks.fig11_storage",
     "benchmarks.preemption",
     "benchmarks.roofline",
 ]

@@ -119,6 +119,13 @@ class EngineBackend:
                 bandwidth: Optional[float]) -> float:
         raise NotImplementedError
 
+    def io_hit_secs(self, op: ScheduledOp, req: EngineRequest) -> float:
+        """Duration of a load whose chunks are already HBM-resident (dedup
+        hit): no interconnect bytes move.  A real backend still executes
+        the op (device-local copy into the live cache); the engine clock
+        charges nothing."""
+        return 0.0
+
     def prefill_secs(self, op: ScheduledOp, req: EngineRequest) -> float:
         """Duration of one suffix-prefill stage op (kind == "prefill")."""
         raise NotImplementedError
@@ -139,6 +146,11 @@ class EngineBackend:
     def suspend(self, req: EngineRequest) -> None:
         """Called when the request's restoration is preempted: its
         partially-restored cache parks (NOT finalized) until resume."""
+
+    def evict(self, req: EngineRequest) -> None:
+        """Eviction-mode preemption (host memory tight): the partially-
+        restored cache is DROPPED, not parked — restoration restarts from
+        the KV store when the request is re-admitted."""
 
     def resume(self, req: EngineRequest) -> None:
         """Called when a preempted request re-enters the active batch."""
@@ -237,10 +249,13 @@ class RealBackend(EngineBackend):
     follows the durations)."""
 
     def __init__(self, executor, *, dur_fn: Optional[Callable[[ScheduledOp], float]] = None,
-                 verify: bool = False):
+                 verify: bool = False, verify_atol: Optional[float] = None):
         self.executor = executor
         self.dur_fn = dur_fn
         self.verify = verify
+        # None = executor default; a quantized chunk store needs its
+        # documented int8 tolerance on top of the recompute atol
+        self.verify_atol = verify_atol
 
     def admit(self, req: EngineRequest) -> None:
         self.executor.begin_restore(req.request_id, plans=req.plans)
@@ -284,19 +299,36 @@ class RealBackend(EngineBackend):
             [jax.tree.leaves(self.executor.live_cache(r)) for r in rids])
         return max(1e-12, time.perf_counter() - t0)
 
+    def io_hit_secs(self, op: ScheduledOp, req: EngineRequest) -> float:
+        # resident chunks: the load still executes (HBM-local copy into the
+        # live cache) but occupies no transfer-channel time on the clock
+        self.executor.execute_op(op)
+        return 0.0
+
     def suspend(self, req: EngineRequest) -> None:
         # park the partially-restored cache off-device; finalize_restore
         # (recurrent-state fix-up) must NOT run — restoration is incomplete
         self.executor.suspend_restore(req.request_id)
 
+    def evict(self, req: EngineRequest) -> None:
+        self.executor.drop_restore(req.request_id)
+
     def resume(self, req: EngineRequest) -> None:
-        self.executor.resume_restore(req.request_id)
+        if self.executor.is_live(req.request_id):
+            self.executor.resume_restore(req.request_id)
+        else:
+            # eviction-mode preemption dropped the live state: restoration
+            # restarts on a fresh cache (plans were reset with it)
+            self.executor.begin_restore(req.request_id, plans=req.plans)
 
     def restore_done(self, req: EngineRequest) -> None:
         # verify BEFORE prefill/decode append to the restored cache
         self.executor.finalize_restore(req.request_id)
         if self.verify:
-            self.executor.verify(req.request_id)
+            if self.verify_atol is not None:
+                self.executor.verify(req.request_id, atol=self.verify_atol)
+            else:
+                self.executor.verify(req.request_id)
 
 
 # ---------------------------------------------------------------------------
@@ -329,7 +361,19 @@ class EngineCore:
     cache; a freed slot re-admits the most urgent of {suspended, queued}
     and a resumed request continues from its completed units — restored
     exactly once, never restarted.  Only RESTORING-phase requests are
-    preemptible: prefill/decode work is never rescinded."""
+    preemptible: prefill/decode work is never rescinded.
+
+    evict=True switches preemption to EVICTION mode (host memory tight):
+    the victim's partially-restored cache is dropped instead of parked and
+    its plans reset, so a re-admitted victim restarts restoration from the
+    KV store — completed work is sacrificed to free memory.
+
+    A kvstore exposing ``io_resident(rid, tokens, layers)`` additionally
+    gates transfers on chunk residency: an I/O unit whose chunks already
+    sit in device HBM (a dedup hit — another request restored the shared
+    prefix, or the payload never left HBM) dispatches at ZERO channel cost
+    (real backends still execute the device-local copy), and the benefit
+    gate passes it unconditionally."""
 
     PREEMPT_POLICIES = ("none", "priority", "deadline")
 
@@ -339,7 +383,8 @@ class EngineCore:
                  channel_fail_at: Optional[Dict[int, float]] = None,
                  stage_parallel: bool = True, max_active: int = 0,
                  kvstore=None, promote_tier: str = "host",
-                 preempt: str = "none", strict: bool = False):
+                 preempt: str = "none", evict: bool = False,
+                 strict: bool = False):
         if preempt not in self.PREEMPT_POLICIES:
             raise ValueError(f"unknown preempt policy {preempt!r}; "
                              f"known: {self.PREEMPT_POLICIES}")
@@ -354,12 +399,20 @@ class EngineCore:
         self.kvstore = kvstore
         self.promote_tier = promote_tier
         self.preempt = preempt
+        self.evict = evict
         self.strict = strict
 
     def _bandwidth(self, rid: str) -> Optional[float]:
         if self.kvstore is None:
             return None
         return self.kvstore.bandwidth_for(rid)
+
+    def _resident(self, rid: str, tokens, layers) -> bool:
+        """Chunk-residency consult for the I/O pointer: True iff the whole
+        unit is already device-resident and the transfer can be skipped."""
+        ks = self.kvstore
+        return (ks is not None and hasattr(ks, "io_resident")
+                and ks.io_resident(rid, tokens, layers))
 
     # ------------------------------------------------------------------
     def run(self, requests: List[EngineRequest],
@@ -382,8 +435,13 @@ class EngineCore:
         gate_slowdown = [1.0]
 
         def benefit(p: RequestPlan, u: int) -> bool:
-            ok = self.backend.io_benefit(p, u, self._bandwidth(p.request_id),
-                                         slowdown=gate_slowdown[0])
+            tokens, layers = p.io_unit_for_claim(u)
+            if self._resident(p.request_id, tokens, layers):
+                ok = True               # resident chunks transfer for free
+            else:
+                ok = self.backend.io_benefit(p, u,
+                                             self._bandwidth(p.request_id),
+                                             slowdown=gate_slowdown[0])
             if trace is not None:
                 trace.record_gate(now, p.request_id, p.stage, u, ok)
             return ok
@@ -487,7 +545,17 @@ class EngineCore:
                         continue
                     r = reqs[op.request_id]
                     bw = self._bandwidth(op.request_id)
-                    dur = self.backend.io_secs(op, r, bw) * self.slow.get(c, 1.0)
+                    if self._resident(op.request_id, op.tokens, op.layers):
+                        # dedup/HBM hit: the unit's chunks are already on
+                        # device — no interconnect transfer, zero channel
+                        # time (the channel frees at this same instant)
+                        dur = self.backend.io_hit_secs(op, r)
+                        if hasattr(self.kvstore, "note_io_hit"):
+                            self.kvstore.note_io_hit(op.request_id,
+                                                     op.tokens, op.layers)
+                    else:
+                        dur = self.backend.io_secs(op, r, bw) \
+                            * self.slow.get(c, 1.0)
                     restore_start.setdefault(op.request_id, now)
                     io_free[c] = False
                     busy_io[c] += dur
@@ -533,7 +601,8 @@ class EngineCore:
         def suspend(vid: str):
             """Preempt a RESTORING request: abort its in-flight ops (their
             time becomes waste, not utilization), release every claim, park
-            the cache, and free the admission slot."""
+            the cache — or DROP it (plans reset) in eviction mode — and
+            free the admission slot."""
             active.discard(vid)
             suspended[vid] = reqs[vid]
             preemptions[vid] = preemptions.get(vid, 0) + 1
@@ -548,8 +617,11 @@ class EngineCore:
                     busy_comp[int(resource[4:])] -= dur
                 t0, t1, rn, desc = ops_log[log_idx]
                 ops_log[log_idx] = (t0, t1, rn, desc + ":aborted")
-            sched.preempt(vid)
-            self.backend.suspend(reqs[vid])
+            sched.preempt(vid, reset=self.evict)
+            if self.evict:
+                self.backend.evict(reqs[vid])
+            else:
+                self.backend.suspend(reqs[vid])
             if trace is not None:
                 trace.record_preempt(now, vid)
 
@@ -760,6 +832,7 @@ class EngineCore:
             "max_active": self.max_active,
             "promote_tier": self.promote_tier,
             "preempt": self.preempt,
+            "evict": self.evict,
         }
 
 

@@ -32,13 +32,26 @@ ATTN_FIELDS = ("k", "v", "ckv")
 
 class RestorationExecutor:
     def __init__(self, model: Model, params, store: Optional[BoundaryStore] = None,
-                 *, chunk_size: int = 16, stages: int = 1):
+                 *, chunk_size: int = 16, stages: int = 1, chunk_store=None):
         self.model = model
         self.params = params
         self.store = store or BoundaryStore()
         self.chunk_size = chunk_size
         self.stages = stages
         self.bounds = stage_bounds(model.cfg.num_layers, stages)
+        # materialized chunk-granular KV store (repro.storage.ChunkStore):
+        # load ops read REAL chunk bytes out of its tiers instead of the
+        # boundary store's ground-truth payload.  Requires linear (non-ring)
+        # attention caches; one store serves one chunk granularity.
+        if chunk_store is not None:
+            if chunk_store.chunk_size != chunk_size:
+                raise ValueError(
+                    f"chunk_store granularity {chunk_store.chunk_size} != "
+                    f"executor chunk_size {chunk_size}")
+            if model.cfg.attn_window:
+                raise ValueError("chunk store does not support ring-buffer "
+                                 "(windowed) caches; token->slot is modular")
+        self.chunk_store = chunk_store
         # live restoration state: rid -> dict(cache=..., act={stage: x}, ...)
         self._live: Dict[str, dict] = {}
         # lifecycle inputs registered before the engine runs:
@@ -77,6 +90,11 @@ class RestorationExecutor:
             boundaries={s: jnp.concatenate(bs, axis=1) for s, bs in boundaries.items()},
             state_snapshots=snapshots, final_logits=logits)
         self.store.put(req)
+        if self.chunk_store is not None and "kpos" in cache:
+            # materialize the prefix KV as content-addressed chunks (shared
+            # prefixes dedup); non-attention state stays in the boundary
+            # store's snapshots — it has no per-token byte range
+            self.chunk_store.put_request(rid, inputs, cache)
         return req
 
     # ------------------------------------------------------------------
@@ -187,9 +205,24 @@ class RestorationExecutor:
         lo, hi = op.layers
         plan = _plan_of(live, op)
         slots = self.model.slots
+        # materialized path: the transfer's bytes come out of the chunk
+        # store's tiers (dequantized on promotion); a store miss (chunk
+        # dropped off the bottom tier) falls back to the ground truth
+        chunks = None
+        if self.chunk_store is not None and "kpos" in cache:
+            chunks = self.chunk_store.fetch_range(op.request_id, t0, t1)
         for i in range(lo, hi):
             kind, slot = slots[i]
             if kind == "attention":
+                if chunks is not None:
+                    for c0, c1, pay in chunks:
+                        for f in ATTN_FIELDS:
+                            if f in cache:
+                                cache[f] = cache[f].at[slot, :, c0:c1].set(
+                                    pay[f][slot])
+                        cache["kpos"] = cache["kpos"].at[slot, c0:c1].set(
+                            pay["kpos"][slot])
+                    continue
                 kp_ref = ref["kpos"][slot]
                 # slots whose stored position falls inside [t0, t1)
                 sel = np.nonzero((np.asarray(kp_ref) >= t0) & (np.asarray(kp_ref) < t1))[0]
@@ -320,6 +353,16 @@ class RestorationExecutor:
         live["cache"] = unpark_cache(live["cache"])
         live["act"] = {k: jnp.asarray(v) for k, v in live["act"].items()}
         live.pop("parked", None)
+
+    def drop_restore(self, rid: str):
+        """Eviction-mode preemption: the partially-restored cache (and its
+        boundary activations) are DROPPED — nothing is parked, host memory
+        is freed immediately.  Restoration restarts from the KV store via a
+        fresh :meth:`begin_restore` when the request is re-admitted."""
+        self._live.pop(rid, None)
+
+    def is_live(self, rid: str) -> bool:
+        return rid in self._live
 
     def finalize_restore(self, rid: str):
         """Recurrent-state fix-up for token-wise plans on hybrid archs: the

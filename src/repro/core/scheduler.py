@@ -28,7 +28,7 @@ import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.plans import RequestPlan
+from repro.core.plans import RequestPlan, TwoPointerPlan
 
 IO_POLICIES = ("longest_remaining", "fifo", "shortest_remaining", "round_robin")
 
@@ -140,15 +140,23 @@ class BatchScheduler:
     # ------------------------------------------------------------------
     # Preempt / resume (engine-core admission pressure)
     # ------------------------------------------------------------------
-    def preempt(self, rid: str):
+    def preempt(self, rid: str, reset: bool = False):
         """Suspend a restoring request: release BOTH pointers' claims on
         every stage plan (the released units become claimable again — the
         plan state machine makes re-execution idempotent) and stop
         generating candidates for it until :meth:`resume`.  Completed units
-        are untouched, so resumption continues rather than restarts."""
+        are untouched, so resumption continues rather than restarts —
+        unless ``reset=True`` (engine-core EVICTION mode): every stage plan
+        is rebuilt at its origin, because the partially-restored cache was
+        dropped and restoration must restart from the KV store."""
         self.suspended.add(rid)
         for p in self._by_rid.get(rid, ()):
-            p.plan.release_claims()
+            if reset:
+                p.plan = TwoPointerPlan(p.plan.n_units,
+                                        comp_enabled=p.plan.comp_enabled,
+                                        io_enabled=p.plan.io_enabled)
+            else:
+                p.plan.release_claims()
 
     def resume(self, rid: str):
         """Re-admit a suspended request: it competes for resources again

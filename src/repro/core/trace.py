@@ -73,7 +73,13 @@ from repro.core.scheduler import ScheduledOp
 #:       admission pressure; the result carries ``preemptions``.  v2 traces
 #:       load by upgrading — no priorities and preempt="none" reproduce the
 #:       FCFS-only admission exactly, so replay is unchanged.
-TRACE_VERSION = 3
+#:   4 — storage eviction mode: meta carries the engine's ``evict`` flag
+#:       (preemption DROPS the partially-restored cache and resets its
+#:       plans instead of parking, so the victim restarts from the KV
+#:       store).  No new events — ``preempt``/``resume`` cover both modes;
+#:       replay re-derives the restart from the flag.  v3 traces upgrade
+#:       with evict=False (park mode), reproducing their runs exactly.
+TRACE_VERSION = 4
 
 
 class TraceVersionError(ValueError):
@@ -231,10 +237,10 @@ class ScheduleTrace:
         if version is None:
             raise TraceVersionError(
                 "trace has no schema version; refusing to guess its format")
-        if version not in (1, 2, TRACE_VERSION):
+        if version not in (1, 2, 3, TRACE_VERSION):
             raise TraceVersionError(
                 f"unsupported trace schema version {version}; this loader "
-                f"reads versions 1-2 (upgraded) and {TRACE_VERSION}")
+                f"reads versions 1-3 (upgraded) and {TRACE_VERSION}")
         # v1 (pre-lifecycle) and v2 (pre-preemption) traces upgrade
         # implicitly: rebuild_requests and result_from_dict default the
         # missing lifecycle extents / priorities / preemption fields, and a
@@ -434,9 +440,18 @@ class ReplayBackend(EngineBackend):
         if self.executor is not None:
             self.executor.suspend_restore(req.request_id)
 
+    def evict(self, req: EngineRequest) -> None:
+        # eviction-mode capture: the victim's live state was dropped; the
+        # replayed restart re-executes every unit onto a fresh cache
+        if self.executor is not None:
+            self.executor.drop_restore(req.request_id)
+
     def resume(self, req: EngineRequest) -> None:
         if self.executor is not None:
-            self.executor.resume_restore(req.request_id)
+            if self.executor.is_live(req.request_id):
+                self.executor.resume_restore(req.request_id)
+            else:
+                self.executor.begin_restore(req.request_id, plans=req.plans)
 
     def io_benefit(self, plan: RequestPlan, unit: int,
                    bandwidth: Optional[float], slowdown: float = 1.0) -> bool:
@@ -488,7 +503,8 @@ def replay_core(trace: ScheduleTrace, backend: EngineBackend,
         io_policy=m["io_policy"],
         channel_fail_at=dict(m.get("channel_fail_at") or {}),
         stage_parallel=m["stage_parallel"], max_active=m["max_active"],
-        preempt=m.get("preempt", "none"), strict=strict)
+        preempt=m.get("preempt", "none"), evict=m.get("evict", False),
+        strict=strict)
 
 
 def replay_trace(trace: ScheduleTrace, executor=None, *, verify: bool = False,

@@ -1,0 +1,1 @@
+from repro.kernels.kv_quant.ops import kv_dequantize, kv_quantize  # noqa: F401

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the per-channel int8 KV quantizer.
+
+Channel = the LAST axis (head_dim for k/v, the compressed latent dim for
+MLA ckv); the scale for each channel is the absmax over every other axis
+of the chunk, so the worst-case round-trip error per element is bounded by
+``0.5 * scale[channel]`` (plus one target-dtype rounding when dequantizing
+back to bf16 — see ``ChunkStore.quant_tolerance``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def kv_quantize_ref(x):
+    """x: float array, any rank >= 1.  Returns (q int8 same shape,
+    scales float32 of shape (x.shape[-1],))."""
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=tuple(range(x.ndim - 1)))
+    scales = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scales), -127, 127).astype(jnp.int8)
+    return q, scales
+
+
+def kv_dequantize_ref(q, scales, dtype=jnp.bfloat16):
+    """Inverse of :func:`kv_quantize_ref` (lossy: per-channel int8)."""
+    return (q.astype(jnp.float32) * scales).astype(dtype)

@@ -4,9 +4,14 @@ Simulation at paper scale (default):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \
       --workload swe_bench --requests 64 --system cacheflow --bandwidth 10Gbps
 
-Real execution on a reduced model (CPU):
+Real execution on a reduced model (CPU): restoration is served from the
+MATERIALIZED chunk-granular KV store (content-addressed dedup across
+hbm/host/disk tiers; see DESIGN.md §10) — ``--kv-quant int8`` stores
+sub-HBM tiers per-channel quantized, ``--store-dir`` materializes the disk
+tier as .npz files, ``--evict`` drops (instead of parks) preempted caches
+and restarts them from the store:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --real \
-      --requests 4 --system cacheflow
+      --requests 4 --system cacheflow --kv-quant int8 --store-dir /tmp/kv
 
 Schedule capture & replay (see repro/core/trace.py): ``--trace-out t.json``
 records the restoration schedule of any run; ``--replay t.json`` re-executes
@@ -30,8 +35,8 @@ from repro.configs import get_config
 from repro.core.baselines import BASELINES
 from repro.core.trace import ScheduleTrace, TraceRecorder, replay_trace
 from repro.models import build_model
-from repro.serving import (RealServingEngine, Request, SimServingEngine,
-                           TieredKVStore, generate)
+from repro.serving import (ChunkStore, RealServingEngine, Request,
+                           SimServingEngine, TieredKVStore, generate)
 from repro.serving.workloads import WORKLOADS
 
 
@@ -157,10 +162,29 @@ def main():
                     help="bursty_priority workload: seconds between bursts")
     ap.add_argument("--kv-tier", default="host",
                     choices=["hbm", "host", "remote"],
-                    help="tier returning prefixes start in (sim): 'remote' "
-                         "models the cold disaggregated store, where "
+                    help="tier returning prefixes start in: 'hbm' is "
+                         "device-resident (restoration transfers are "
+                         "skipped entirely as dedup/residency hits), "
+                         "'host' models warm DRAM reuse, and 'remote' the "
+                         "cold disaggregated store (the real-mode chunk "
+                         "store maps it to its disk tier), where "
                          "restoration dominates and admission pressure "
                          "(and preemption) is real")
+    ap.add_argument("--kv-quant", default="none", choices=["none", "int8"],
+                    help="per-channel int8 compression of sub-HBM tiers "
+                         "(kernels/kv_quant): real mode stores quantized "
+                         "chunk bytes and dequantizes on promotion; sim "
+                         "mode halves stored bytes / doubles effective "
+                         "transfer bandwidth")
+    ap.add_argument("--store-dir", metavar="DIR",
+                    help="real mode: materialize the chunk store's bottom "
+                         "tier as .npz files under DIR (in-memory blobs "
+                         "when omitted)")
+    ap.add_argument("--evict", action="store_true",
+                    help="eviction-mode preemption: drop the victim's "
+                         "partially-restored cache (instead of parking "
+                         "it) and restart restoration from the KV store "
+                         "on re-admission — for when host memory is tight")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--real", action="store_true", help="run a reduced model for real")
     ap.add_argument("--trace-out", metavar="PATH",
@@ -181,11 +205,20 @@ def main():
         cfg = get_config(args.arch).reduced()
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
+        # real mode restores from the MATERIALIZED chunk store: prefix KV
+        # lives as content-addressed, deduplicated chunks across
+        # hbm/host/disk tiers and load ops move its actual bytes
+        store = None
+        if not cfg.attn_window:
+            store = ChunkStore(chunk_size=16, quant=args.kv_quant,
+                               store_dir=args.store_dir,
+                               default_tier=args.kv_tier)
         eng = RealServingEngine(model, params, system=args.system,
                                 stages=min(args.stages, 2), chunk_size=16,
                                 max_batch=args.max_batch,
                                 io_channels=args.io_channels,
-                                preempt=args.preempt)
+                                preempt=args.preempt, evict=args.evict,
+                                kvstore=store)
         decode_len = args.decode_len if args.decode_len >= 0 else 8
         # with a preemption policy armed, stagger arrivals and mark every
         # other request urgent so admission pressure actually exercises it;
@@ -202,12 +235,21 @@ def main():
         rep = eng.serve(reqs, trace=recorder)
         if recorder is not None:
             _save_trace(recorder, args.trace_out, arch=args.arch)
-        print(json.dumps({"system": args.system, "mode": "real",
-                          "lifecycle": rep.stats,
-                          "preemptions": sum(rep.preemptions.values()),
-                          "compute_busy": round(rep.compute_busy, 3),
-                          "io_busy": round(rep.io_busy, 3),
-                          "decode_busy": round(rep.decode_busy, 3)}, indent=1))
+        out = {"system": args.system, "mode": "real",
+               "lifecycle": rep.stats,
+               "preemptions": sum(rep.preemptions.values()),
+               "compute_busy": round(rep.compute_busy, 3),
+               "io_busy": round(rep.io_busy, 3),
+               "decode_busy": round(rep.decode_busy, 3)}
+        if store is not None:
+            out["storage"] = {
+                "chunks": len(store.chunks), "dedup_hits": store.dedup_hits,
+                "bytes_put": store.bytes_put,
+                "bytes_transferred": store.bytes_transferred,
+                "io_hits": store.io_hits,
+                "skipped_transfers": store.skipped_transfers,
+                "store_misses": store.store_misses}
+        print(json.dumps(out, indent=1))
         return
 
     cfg = get_config(args.arch)
@@ -221,13 +263,15 @@ def main():
     if args.decode_len >= 0:
         for r in reqs:
             r.decode_len = args.decode_len
-    store = TieredKVStore(remote_bw=IO_BANDWIDTHS[args.bandwidth])
+    store = TieredKVStore(remote_bw=IO_BANDWIDTHS[args.bandwidth],
+                          quant=args.kv_quant)
     eng = SimServingEngine(cfg, HARDWARE[args.hardware],
                            io_bandwidth=IO_BANDWIDTHS[args.bandwidth],
                            system=args.system, stages=args.stages,
                            max_batch=args.max_batch, kvstore=store,
                            io_channels=args.io_channels,
-                           preempt=args.preempt, kv_tier=args.kv_tier)
+                           preempt=args.preempt, evict=args.evict,
+                           kv_tier=args.kv_tier)
     rep = eng.run(reqs, trace=recorder)
     if recorder is not None:
         _save_trace(recorder, args.trace_out, arch=args.arch)

@@ -100,7 +100,8 @@ class SimServingEngine:
                  l_delta: Optional[int] = None, max_batch: int = 0,
                  kvstore: Optional[TieredKVStore] = None,
                  channel_slowdown=None, channel_fail_at=None,
-                 preempt: str = "none", kv_tier: str = "host"):
+                 preempt: str = "none", evict: bool = False,
+                 kv_tier: str = "host"):
         self.cfg = cfg
         self.system = system
         self.stages = stages
@@ -114,6 +115,7 @@ class SimServingEngine:
         self.channel_slowdown = channel_slowdown
         self.channel_fail_at = channel_fail_at
         self.preempt = preempt
+        self.evict = evict
         # which tier returning prefixes start in: "host" models warm reuse,
         # "remote" the paper's cold disaggregated-store regime where
         # restoration time (and hence admission pressure) is real
@@ -126,7 +128,8 @@ class SimServingEngine:
             io_channels=self.io_channels, max_active=self.max_batch,
             channel_slowdown=self.channel_slowdown,
             channel_fail_at=self.channel_fail_at,
-            kvstore=self.kvstore, preempt=self.preempt, **kw)
+            kvstore=self.kvstore, preempt=self.preempt, evict=self.evict,
+            **kw)
 
     def run(self, requests: List[Request], trace=None) -> ServingReport:
         """Drive every request through its whole lifecycle (restore →
@@ -172,7 +175,7 @@ class RealServingEngine:
                  stages: int = 1, chunk_size: int = 16, l_delta: int = 64,
                  seed: int = 0, io_channels: int = 1, max_batch: int = 0,
                  kvstore: Optional[TieredKVStore] = None,
-                 preempt: str = "none"):
+                 preempt: str = "none", evict: bool = False):
         self.model = model
         self.params = params
         self.system = system
@@ -183,8 +186,15 @@ class RealServingEngine:
         self.max_batch = max_batch
         self.kvstore = kvstore
         self.preempt = preempt
-        self.executor = RestorationExecutor(model, params, chunk_size=chunk_size,
-                                            stages=stages)
+        self.evict = evict
+        # a MATERIALIZED store (repro.storage.ChunkStore) plugs in as both
+        # the engine-core kvstore (residency/bandwidth/dedup-hit protocol)
+        # and the executor's byte source: load ops then move real chunk
+        # bytes out of its tiers instead of copying ground truth
+        materialized = getattr(kvstore, "materialized", False)
+        self.executor = RestorationExecutor(
+            model, params, chunk_size=chunk_size, stages=stages,
+            chunk_store=kvstore if materialized else None)
         self._rng = jax.random.PRNGKey(seed)
 
     def _inputs(self, n: int):
@@ -196,7 +206,11 @@ class RealServingEngine:
     def remember(self, r: Request):
         """Previous-turn prefill: persist KV + boundaries for the request."""
         self.executor.remember(r.request_id, self._inputs(r.prefix_len))
-        if self.kvstore is not None:
+        if self.kvstore is not None and \
+                not getattr(self.kvstore, "materialized", False):
+            # the materialized store already holds the real chunk bytes
+            # (executor.remember wrote them); only the sim-model store
+            # needs a virtual whole-request placement
             self.kvstore.put(r.request_id,
                              r.prefix_len * self.model.cfg.kv_bytes_per_token())
 
@@ -254,13 +268,20 @@ class RealServingEngine:
                                              decode_len=r.decode_len,
                                              priority=r.priority,
                                              deadline=r.deadline))
+        # a quantized chunk store's restored KV carries its documented int8
+        # error on top of the chunked-recompute tolerance
+        atol = None
+        if getattr(self.kvstore, "materialized", False) \
+                and self.kvstore.quant != "none":
+            atol = 2e-2 + self.kvstore.quant_tolerance()
         backend = RealBackend(self.executor,
                               dur_fn=interleaving_dur_fn(op_order, rng),
-                              verify=verify)
+                              verify=verify, verify_atol=atol)
         core = EngineCore(backend, stages=self.stages,
                           io_channels=self.io_channels,
                           max_active=self.max_batch, kvstore=self.kvstore,
-                          preempt=self.preempt, strict=True)
+                          preempt=self.preempt, evict=self.evict,
+                          strict=True)
         t0 = time.perf_counter()
         res = core.run(engine_reqs, trace=trace)
         serve_wall = time.perf_counter() - t0

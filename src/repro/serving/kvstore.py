@@ -2,92 +2,101 @@
 
 On a real v5e fleet the tiers are per-chip HBM (819 GB/s), host DRAM over
 DMA, and a remote disaggregated store over DCN (the paper's 10–80 Gbps
-regime).  Here the store tracks placement, enforces capacities with LRU
-spill, and reports the channel bandwidth restoration I/O sees for a given
-request — which is what the CacheFlow cost model and simulator consume.
+regime).  This is the SIM-MODE facade: placement is per *request* payload
+(KV bytes + boundary activations) and no real bytes move — the store
+tracks placement, enforces capacities, and reports the channel bandwidth
+restoration I/O sees for a given request, which is what the CacheFlow cost
+model and simulator consume.  The materialized, chunk-granular store that
+actually holds tensor bytes (real mode) is
+:class:`repro.storage.chunkstore.ChunkStore`; both sit on the SAME
+placement/accounting core (:mod:`repro.storage.placement`), so capacities,
+recency, and the demotion cascade behave identically.
 
-Placement is per *request* payload (KV bytes + boundary activations), the
-granularity the paper's storage tier operates at.
+The cascade is correct when lower tiers are also full (see
+``PlacementCore``): an entry larger than a tier's capacity skips to the
+first tier that fits, demotion into a full tier recursively evicts there,
+and only the bottom tier drops entries (counted, never silent).
+
+``quant="int8"`` models the kv_quant compression of sub-HBM tiers: entries
+below ``hbm`` occupy half their bytes and their transfers see 2× the
+tier's nominal bandwidth (half the bytes on the wire).
 """
 from __future__ import annotations
 
-from collections import OrderedDict
-from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Optional, Tuple
+
+from repro.storage.placement import PlacementCore, Tier
 
 TIER_ORDER = ("hbm", "host", "remote")
-
-
-@dataclass
-class Tier:
-    name: str
-    bandwidth: float               # bytes/s toward HBM
-    capacity: float                # bytes
-    used: float = 0.0
-    lru: "OrderedDict[str, int]" = field(default_factory=OrderedDict)
 
 
 class TieredKVStore:
     def __init__(self, *, hbm_bw: float = 819e9, hbm_cap: float = 4e9,
                  host_bw: float = 100e9, host_cap: float = 200e9,
                  remote_bw: float = 10e9 / 8, remote_cap: float = 100e12,
-                 io_channels: int = 1):
-        self.tiers: Dict[str, Tier] = {
-            "hbm": Tier("hbm", hbm_bw, hbm_cap),
-            "host": Tier("host", host_bw, host_cap),
-            "remote": Tier("remote", remote_bw, remote_cap),
-        }
+                 io_channels: int = 1, quant: str = "none"):
+        if quant not in ("none", "int8"):
+            raise ValueError(f"unknown quant mode {quant!r}")
+        self.quant = quant
+        self.core = PlacementCore(
+            [Tier("hbm", hbm_bw, hbm_cap), Tier("host", host_bw, host_cap),
+             Tier("remote", remote_bw, remote_cap)],
+            size_fn=self._size)
         self.io_channels = io_channels
-        self.placement: Dict[str, str] = {}   # rid -> tier name
+        self._raw: dict = {}            # rid -> nominal payload bytes
+        self.io_hits = 0                # transfers skipped (HBM-resident)
+
+    # ------------------------------------------------------------------
+    def _size(self, rid: str, tier: str) -> float:
+        nb = self._raw[rid]
+        if self.quant == "int8" and tier != "hbm":
+            return (nb + 1) // 2        # int8 halves the bf16 payload
+        return nb
+
+    @property
+    def tiers(self):
+        return self.core.tiers
+
+    @property
+    def placement(self):
+        return self.core.placement
 
     # ------------------------------------------------------------------
     def put(self, rid: str, nbytes: int, tier: str = "host"):
-        """Store a request's KV payload, spilling LRU entries downward."""
-        self._evict_for(tier, nbytes)
-        t = self.tiers[tier]
-        t.lru[rid] = nbytes
-        t.used += nbytes
-        self.placement[rid] = tier
-
-    def _evict_for(self, tier: str, nbytes: int):
-        t = self.tiers[tier]
-        order = list(TIER_ORDER)
-        below = order[order.index(tier) + 1] if tier != "remote" else None
-        while t.used + nbytes > t.capacity and t.lru:
-            victim, vbytes = t.lru.popitem(last=False)
-            t.used -= vbytes
-            if below is not None:
-                self.put(victim, vbytes, below)
-            else:
-                self.placement.pop(victim, None)
+        """Store a request's KV payload, demoting victims downward (the
+        cascade never over-fills a tier; bottom-tier drops are counted)."""
+        self._raw[rid] = nbytes
+        self.core.put(rid, tier)
 
     def touch(self, rid: str):
-        tier = self.placement.get(rid)
-        if tier:
-            t = self.tiers[tier]
-            if rid in t.lru:
-                t.lru.move_to_end(rid)
+        self.core.touch(rid)
 
     def tier_of(self, rid: str) -> Optional[str]:
-        return self.placement.get(rid)
+        return self.core.tier_of(rid)
 
     def bandwidth_for(self, rid: str) -> float:
         """Channel bandwidth restoration I/O sees for this request's payload."""
-        tier = self.placement.get(rid, "remote")
-        return self.tiers[tier].bandwidth
+        tier = self.core.tier_of(rid) or "remote"
+        bw = self.core.tiers[tier].bandwidth
+        if self.quant == "int8" and tier != "hbm":
+            bw *= 2.0                   # half the bytes move per KV token
+        return bw
 
     def promote(self, rid: str, to: str = "host"):
-        tier = self.placement.get(rid)
-        if tier is None or TIER_ORDER.index(tier) <= TIER_ORDER.index(to):
-            return
-        t = self.tiers[tier]
-        nbytes = t.lru.pop(rid)
-        t.used -= nbytes
-        self.put(rid, nbytes, to)
+        self.core.promote(rid, to)
 
     def evict(self, rid: str):
-        tier = self.placement.pop(rid, None)
-        if tier:
-            t = self.tiers[tier]
-            nbytes = t.lru.pop(rid, 0)
-            t.used -= nbytes
+        self.core.remove(rid)
+        self._raw.pop(rid, None)
+
+    # ------------------------------------------------------------------
+    # Engine-core residency protocol: an HBM-resident payload needs no
+    # restoration transfer at all — the engine skips the I/O channel.
+    # ------------------------------------------------------------------
+    def io_resident(self, rid: str, tokens: Tuple[int, int],
+                    layers: Tuple[int, int]) -> bool:
+        return self.core.tier_of(rid) == "hbm"
+
+    def note_io_hit(self, rid: str, tokens: Tuple[int, int],
+                    layers: Tuple[int, int]):
+        self.io_hits += 1

@@ -1,0 +1,3 @@
+from repro.storage.chunkstore import (CHUNK_TIERS, ChunkStore,  # noqa: F401
+                                      chunk_hash_chain)
+from repro.storage.placement import PlacementCore, Tier  # noqa: F401

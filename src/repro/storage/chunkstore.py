@@ -1,0 +1,440 @@
+"""Materialized, content-addressed, chunk-granular KV storage.
+
+Unlike the sim-mode :class:`~repro.serving.kvstore.TieredKVStore` (a
+bandwidth/capacity *model* over whole-request placeholders), this store
+actually holds tensor bytes.  A stored chunk is the attention-KV slice
+(k/v or MLA ckv, plus kpos) of one ``chunk_size``-token span of a prefix,
+keyed by a prefix-chained content hash::
+
+    h_0 = sha256(salt)            h_i = sha256(h_{i-1} || tokens_i)
+
+so chunk ``i`` names the KV of tokens [i·C, (i+1)·C) *given its entire
+prefix* — exactly the dependence structure of causal attention.  Two
+requests sharing a prefix hash to the same chunks and dedup to ONE stored
+copy with a refcount (vLLM-style prefix caching, here across the storage
+tiers of the CacheFlow restoration path).
+
+Tiers (placement/accounting shared with the sim store via
+:class:`~repro.storage.placement.PlacementCore`):
+
+  * ``hbm``  — device arrays (the restoration executor's load ops copy
+    straight out of this view; a chunk resident here costs NO transfer —
+    the engine core skips the I/O channel entirely, a *dedup hit*);
+  * ``host`` — DRAM numpy buffers; with ``quant="int8"`` the chunk is
+    stored per-channel int8-quantized (``kernels/kv_quant``), so demotion
+    compresses and promotion dequantizes — transfers move ~half the bytes;
+  * ``disk`` — serialized ``.npz`` bytes, written under ``store_dir`` when
+    given (a real on-disk tier) or held as in-memory blobs otherwise.
+
+Eviction is benefit-aware: the victim is the chunk with the least
+restoration benefit per byte — ``refcount × recompute-cost(t0,t1) /
+nbytes`` (causal attention makes late chunks quadratically more expensive
+to recompute, and shared chunks save that cost for every referent);
+refcount-0 chunks go first.  Only the bottom tier drops bytes; a dropped
+chunk is simply a future ``store miss`` and restoration falls back to
+recompute/ground-truth.
+
+Quantization is one-way per chunk: the int8 form becomes authoritative on
+first demotion and promotion decodes a bf16 *view*, so repeated
+demote/promote cycles re-encode from a decoded view and may drift by at
+most one LSB per cycle.  ``quant="none"`` round-trips bit-exactly through
+every tier — the restoration served from this store then bit-matches the
+full-prefill reference.
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.kv_quant import kv_dequantize, kv_quantize
+from repro.storage.placement import PlacementCore, Tier
+
+CHUNK_TIERS = ("hbm", "host", "disk")
+ATTN_FIELDS = ("k", "v", "ckv")
+
+
+def chunk_hash_chain(inputs, chunk_size: int, salt: str = "") -> List[str]:
+    """Prefix-chained content hashes of the token chunks of ``inputs``
+    ((1, N) tokens or (1, N, D) embeddings)."""
+    arr = np.ascontiguousarray(np.asarray(inputs))
+    n = arr.shape[1]
+    h = hashlib.sha256(salt.encode()).digest()
+    keys = []
+    for t0 in range(0, n, chunk_size):
+        h = hashlib.sha256(h + arr[:, t0:t0 + chunk_size].tobytes()).digest()
+        keys.append(h.hex())
+    return keys
+
+
+@dataclass
+class _Chunk:
+    tokens: Tuple[int, int]
+    fields: Tuple[str, ...]           # float KV fields present (k/v or ckv)
+    dtypes: Dict[str, object]
+    raw_nbytes: int
+    quant_nbytes: int
+    refcount: int = 0
+    # live representations; at most the placed tier's is authoritative
+    reprs: dict = field(default_factory=dict)   # "hbm"|"host"|"disk" -> payload
+
+
+class ChunkStore:
+    """Chunk-granular KV store frontend over the shared placement core.
+
+    Implements the engine-core kvstore protocol (``touch`` / ``promote`` /
+    ``bandwidth_for`` / ``io_resident`` / ``note_io_hit``) keyed by request
+    id, mapping each request to its chunk chain."""
+
+    materialized = True               # serving engines skip the sim-put path
+
+    def __init__(self, *, chunk_size: int = 16,
+                 hbm_bw: float = 819e9, hbm_cap: float = 1 << 30,
+                 host_bw: float = 100e9, host_cap: float = 1 << 33,
+                 disk_bw: float = 10e9 / 8, disk_cap: float = 1 << 40,
+                 quant: str = "none", store_dir: Optional[str] = None,
+                 eviction: str = "benefit", default_tier: str = "host",
+                 salt: str = ""):
+        if quant not in ("none", "int8"):
+            raise ValueError(f"unknown quant mode {quant!r}")
+        if eviction not in ("benefit", "lru"):
+            raise ValueError(f"unknown eviction policy {eviction!r}")
+        if default_tier == "remote":          # TieredKVStore vocabulary
+            default_tier = "disk"
+        if default_tier not in CHUNK_TIERS:
+            raise ValueError(f"unknown tier {default_tier!r}")
+        self.chunk_size = chunk_size
+        self.quant = quant
+        self.store_dir = store_dir
+        self.default_tier = default_tier
+        self.salt = salt
+        if store_dir:
+            os.makedirs(store_dir, exist_ok=True)
+        self.core = PlacementCore(
+            [Tier("hbm", hbm_bw, hbm_cap), Tier("host", host_bw, host_cap),
+             Tier("disk", disk_bw, disk_cap)],
+            size_fn=self._size, move_fn=self._move, drop_fn=self._drop,
+            victim_fn=self._benefit if eviction == "benefit" else None)
+        self.chunks: Dict[str, _Chunk] = {}
+        self.requests: Dict[str, List[str]] = {}   # rid -> chunk key chain
+        # accounting (benchmarks/tests read these)
+        self.dedup_hits = 0
+        self.bytes_deduped = 0
+        self.puts = 0
+        self.fetches = 0                 # chunk transfers out of host/disk
+        self.io_hits = 0                 # fetches served from the hbm view
+        self.skipped_transfers = 0       # engine-level channel skips
+        self.bytes_put = 0
+        self.bytes_transferred = 0       # bytes moved toward HBM (post-quant)
+        self.store_misses = 0
+        self.max_scale = 0.0             # worst per-channel int8 scale seen
+
+    # ------------------------------------------------------------------
+    # Placement-core callbacks
+    # ------------------------------------------------------------------
+    def _size(self, key: str, tier: str) -> float:
+        c = self.chunks[key]
+        if tier != "hbm" and self.quant == "int8":
+            return c.quant_nbytes
+        return c.raw_nbytes
+
+    def _benefit(self, key: str) -> float:
+        """Restoration benefit density: recompute cost saved per stored
+        byte.  Causal attention makes a chunk over [t0, t1) cost
+        O(t1² − t0²) to recompute; every referent saves that."""
+        c = self.chunks[key]
+        t0, t1 = c.tokens
+        return c.refcount * (t1 * t1 - t0 * t0 + (t1 - t0)) \
+            / max(1, c.raw_nbytes)
+
+    def _move(self, key: str, src: Optional[str], dst: str):
+        c = self.chunks[key]
+        if dst not in c.reprs:
+            if dst == "hbm":
+                c.reprs["hbm"] = self._decode_device(key)
+            elif dst == "host":
+                c.reprs["host"] = self._encode_host(key)
+            else:
+                c.reprs["disk"] = self._encode_disk(key)
+        for t in (*CHUNK_TIERS, "raw"):
+            if t != dst and t in c.reprs:
+                self._del_repr(key, t)
+
+    def _drop(self, key: str, src: Optional[str]):
+        c = self.chunks.pop(key, None)
+        if c is not None:
+            for t in list(c.reprs):
+                self._del_repr_obj(c, t)
+        # the key stays in request chains: fetching it later is a store
+        # miss and restoration falls back to recompute/ground truth
+
+    def _del_repr(self, key: str, tier: str):
+        self._del_repr_obj(self.chunks[key], tier)
+
+    def _del_repr_obj(self, c: _Chunk, tier: str):
+        rep = c.reprs.pop(tier, None)
+        if tier == "disk" and isinstance(rep, str) and os.path.exists(rep):
+            os.remove(rep)
+
+    # ------------------------------------------------------------------
+    # Representation codecs
+    # ------------------------------------------------------------------
+    def _host_payload(self, key: str) -> dict:
+        """The chunk as its host-tier encoding: raw numpy (quant="none")
+        or {"kpos", f: {"q", "scales"}} (quant="int8")."""
+        c = self.chunks[key]
+        if "host" in c.reprs:
+            return c.reprs["host"]
+        if "disk" in c.reprs:
+            return self._read_disk(c.reprs["disk"], c)
+        if "raw" in c.reprs:                 # staged put, not yet placed
+            raw = c.reprs["raw"]
+        else:
+            dev = c.reprs["hbm"]
+            raw = {f: np.asarray(dev[f]) for f in c.fields}
+            raw["kpos"] = np.asarray(dev["kpos"])
+        return self._quantize(raw) if self.quant == "int8" else raw
+
+    def _encode_host(self, key: str) -> dict:
+        return self._host_payload(key)
+
+    def _quantize(self, raw: dict) -> dict:
+        out = {"kpos": raw["kpos"]}
+        for f, arr in raw.items():
+            if f == "kpos":
+                continue
+            q, scales = kv_quantize(jnp.asarray(arr))
+            self.max_scale = max(self.max_scale, float(jnp.max(scales)))
+            out[f] = {"q": np.asarray(q), "scales": np.asarray(scales)}
+        return out
+
+    def _decode_device(self, key: str) -> dict:
+        """The chunk as device arrays in its original dtypes (the HBM view
+        restoration load ops copy from)."""
+        c = self.chunks[key]
+        if "raw" in c.reprs:
+            # a freshly-put chunk landing straight in HBM must NOT round-
+            # trip through the quantizer: quantization applies only to
+            # sub-HBM encodings (first demotion makes the int8 form
+            # authoritative — never before)
+            raw = c.reprs["raw"]
+            dev = {"kpos": jnp.asarray(raw["kpos"])}
+            for f in c.fields:
+                dev[f] = jnp.asarray(raw[f])
+            return dev
+        host = self._host_payload(key)
+        dev = {"kpos": jnp.asarray(host["kpos"])}
+        for f in c.fields:
+            rep = host[f]
+            if isinstance(rep, dict):              # quantized
+                dev[f] = kv_dequantize(jnp.asarray(rep["q"]),
+                                       jnp.asarray(rep["scales"]),
+                                       dtype=c.dtypes[f])
+            else:
+                dev[f] = jnp.asarray(rep)
+        return dev
+
+    def _flatten_host(self, host: dict) -> dict:
+        flat = {"kpos": host["kpos"]}
+        for f, rep in host.items():
+            if f == "kpos":
+                continue
+            if isinstance(rep, dict):
+                flat[f + "__q"] = rep["q"]
+                flat[f + "__scales"] = rep["scales"]
+            else:
+                flat[f + "__raw"] = rep
+        return flat
+
+    def _encode_disk(self, key: str):
+        flat = self._flatten_host(self._host_payload(key))
+        # bf16 has no numpy dtype: store a raw byte view + dtype tag
+        packed = {}
+        for k, a in flat.items():
+            a = np.ascontiguousarray(np.asarray(a))
+            packed[k] = a.view(np.uint8) if a.dtype.kind == "V" else a
+        if self.store_dir:
+            path = os.path.join(self.store_dir, key + ".npz")
+            np.savez(path, **packed)
+            return path
+        buf = io.BytesIO()
+        np.savez(buf, **packed)
+        return buf.getvalue()
+
+    def _read_disk(self, rep, c: _Chunk) -> dict:
+        src = rep if isinstance(rep, str) else io.BytesIO(rep)
+        with np.load(src) as z:
+            flat = {k: z[k] for k in z.files}
+        host = {"kpos": flat["kpos"]}
+        for f in c.fields:
+            if f + "__q" in flat:
+                host[f] = {"q": flat[f + "__q"], "scales": flat[f + "__scales"]}
+            else:
+                arr = flat[f + "__raw"]
+                dt = np.dtype(c.dtypes[f])
+                if dt.kind == "V":       # bf16 was stored as a uint8 view
+                    arr = arr.view(dt)
+                host[f] = arr
+        return host
+
+    # ------------------------------------------------------------------
+    # Request-facing API
+    # ------------------------------------------------------------------
+    def put_request(self, rid: str, inputs, cache: dict,
+                    tier: Optional[str] = None) -> List[str]:
+        """Store a request's prefix KV as content-addressed chunks; chunks
+        another request already stored dedup to a refcount bump.  Returns
+        the chunk key chain."""
+        keys = chunk_hash_chain(inputs, self.chunk_size, self.salt)
+        fields = tuple(f for f in ATTN_FIELDS if f in cache)
+        if not fields:
+            raise ValueError("cache has no attention KV fields to store")
+        n = int(np.asarray(inputs).shape[1])
+        if rid in self.requests:
+            self.free_request(rid)
+        for ci, key in enumerate(keys):
+            t0, t1 = ci * self.chunk_size, min(n, (ci + 1) * self.chunk_size)
+            c = self.chunks.get(key)
+            if c is not None:
+                c.refcount += 1
+                self.dedup_hits += 1
+                self.bytes_deduped += c.raw_nbytes
+                self.core.touch(key)
+                continue
+            raw = {f: np.asarray(cache[f][:, :, t0:t1]) for f in fields}
+            raw["kpos"] = np.asarray(cache["kpos"][:, t0:t1])
+            raw_nb = sum(a.nbytes for a in raw.values())
+            quant_nb = raw["kpos"].nbytes + sum(
+                raw[f].size + raw[f].shape[-1] * 4 for f in fields)
+            c = _Chunk((t0, t1), fields,
+                       {f: cache[f].dtype for f in fields}, raw_nb, quant_nb,
+                       refcount=1)
+            # stage the exact payload; the placement's move_fn encodes it
+            # for whatever tier the chunk actually lands in (quantization
+            # only happens when a sub-HBM encoding is needed)
+            c.reprs["raw"] = raw
+            self.chunks[key] = c
+            self.puts += 1
+            self.bytes_put += raw_nb
+            self.core.put(key, tier or self.default_tier)
+        self.requests[rid] = keys
+        return keys
+
+    def free_request(self, rid: str):
+        """Drop a request's reference to its chunks.  Chunks at refcount 0
+        stay stored (prefix cache) but evict first (zero benefit)."""
+        for key in self.requests.pop(rid, ()):
+            c = self.chunks.get(key)
+            if c is None:
+                continue                 # already dropped from the bottom tier
+            if c.refcount <= 0:
+                raise AssertionError(f"negative refcount for chunk {key}")
+            c.refcount -= 1
+
+    def fetch(self, key: str) -> Optional[dict]:
+        """The chunk as device arrays, promoting it to the HBM tier.  An
+        already-resident chunk is a hit (no bytes transferred); a chunk in
+        a lower tier transfers its (possibly quantized) stored bytes.
+        Returns None (a store miss) if the chunk was dropped."""
+        c = self.chunks.get(key)
+        tier = self.core.tier_of(key)
+        if c is None or tier is None:
+            self.store_misses += 1
+            return None
+        if tier == "hbm":
+            self.io_hits += 1
+            self.core.touch(key)
+            return c.reprs["hbm"]
+        self.fetches += 1
+        self.bytes_transferred += self._size(key, tier)
+        landed = self.core.promote(key, "hbm")
+        if landed == "hbm":
+            return c.reprs["hbm"]
+        # HBM tier can't hold it (oversized/cap pressure): ephemeral view
+        return self._decode_device(key)
+
+    def fetch_range(self, rid: str, t0: int, t1: int
+                    ) -> Optional[List[Tuple[int, int, dict]]]:
+        """Device payloads of every chunk overlapping tokens [t0, t1) —
+        what a restoration load op copies into the live cache.  None if any
+        chunk is missing (caller falls back to ground truth)."""
+        keys = self.requests.get(rid)
+        if keys is None:
+            return None
+        cs = self.chunk_size
+        out = []
+        for ci in range(t0 // cs, min(len(keys), -(-t1 // cs))):
+            pay = self.fetch(keys[ci])
+            if pay is None:
+                return None
+            c0, c1 = self.chunks[keys[ci]].tokens
+            out.append((c0, c1, pay))
+        return out
+
+    # ------------------------------------------------------------------
+    # Engine-core kvstore protocol (keyed by request id)
+    # ------------------------------------------------------------------
+    def touch(self, rid: str):
+        for key in self.requests.get(rid, ()):
+            self.core.touch(key)
+
+    def promote(self, rid: str, to: str = "host"):
+        if to == "remote":
+            to = "disk"
+        for key in self.requests.get(rid, ()):
+            self.core.promote(key, to)
+
+    def tier_of(self, rid: str) -> Optional[str]:
+        """Worst (lowest) tier among the request's chunks."""
+        worst = None
+        for key in self.requests.get(rid, ()):
+            t = self.core.tier_of(key)
+            if t is None:
+                return None              # a chunk is gone: treat as cold
+            if worst is None or CHUNK_TIERS.index(t) > CHUNK_TIERS.index(worst):
+                worst = t
+        return worst
+
+    def bandwidth_for(self, rid: str) -> float:
+        tier = self.tier_of(rid) or "disk"
+        bw = self.core.tiers[tier].bandwidth
+        if self.quant == "int8" and tier != "hbm":
+            bw *= 2.0                    # int8 halves the bytes on the wire
+        return bw
+
+    def io_resident(self, rid: str, tokens: Tuple[int, int],
+                    layers: Tuple[int, int]) -> bool:
+        """True iff every chunk overlapping the token span is HBM-resident
+        — the transfer for this I/O unit can be skipped entirely."""
+        keys = self.requests.get(rid)
+        if not keys:
+            return False
+        cs = self.chunk_size
+        t0, t1 = tokens
+        for ci in range(t0 // cs, min(len(keys), -(-t1 // cs))):
+            if self.core.tier_of(keys[ci]) != "hbm":
+                return False
+        return True
+
+    def note_io_hit(self, rid: str, tokens: Tuple[int, int],
+                    layers: Tuple[int, int]):
+        self.skipped_transfers += 1
+
+    # ------------------------------------------------------------------
+    def quant_tolerance(self) -> float:
+        """Documented bound on the restored-KV error under int8: 0.5·scale
+        round-off + up to 0.5·scale from the bf16 re-cast of the decoded
+        view, per channel — i.e. one max-magnitude scale."""
+        return 0.0 if self.quant == "none" else self.max_scale + 1e-6
+
+    def audit(self):
+        self.core.audit()
+        for rid, keys in self.requests.items():
+            for key in keys:
+                c = self.chunks.get(key)
+                assert c is None or c.refcount >= 0, (rid, key)

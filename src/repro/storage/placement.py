@@ -1,0 +1,182 @@
+"""Tier placement & accounting core shared by every KV-storage frontend.
+
+One state machine answers "which tier holds this entry?" for both the
+sim-mode :class:`repro.serving.kvstore.TieredKVStore` (whole-request
+payloads, virtual bytes) and the materialized
+:class:`repro.storage.chunkstore.ChunkStore` (content-addressed chunks,
+real tensor bytes).  The core owns capacities, recency, eviction order and
+the demotion cascade; frontends own what an entry *is* (its bytes, its
+per-tier encoding) through three callbacks:
+
+  * ``size_fn(key, tier) -> int``   — entry size in ``tier`` (pure; lower
+    tiers may store a compressed encoding, e.g. int8-quantized KV).
+  * ``move_fn(key, src, dst)``      — re-encode the payload for ``dst``
+    (``src is None`` on first insert).  Called exactly once per placement.
+  * ``drop_fn(key, src)``           — the entry leaves the store entirely
+    (bottom-tier eviction overflow).
+
+Eviction is benefit-aware when ``victim_fn`` is given: the tier victim is
+the entry with the SMALLEST ``victim_fn(key)`` (least restoration benefit
+lost per byte evicted), recency breaking ties; without it, plain LRU.
+
+Demotion cascades correctly when lower tiers are full (the historical
+``TieredKVStore._evict_for`` could over-fill a tier or silently lose
+entries):
+
+  * an entry larger than a tier's whole capacity skips that tier and
+    places in the first tier below that can hold it — no tier is ever
+    filled past capacity;
+  * a victim demoted into a full tier recursively evicts there;
+  * only the bottom tier drops entries, and every drop is counted
+    (``drops``) and surfaced to the frontend via ``drop_fn``.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+
+@dataclass
+class Tier:
+    name: str
+    bandwidth: float               # bytes/s toward HBM
+    capacity: float                # bytes
+    used: float = 0.0
+    # key -> nbytes in THIS tier's encoding; front = eviction candidate
+    lru: "OrderedDict[str, float]" = field(default_factory=OrderedDict)
+
+
+class PlacementCore:
+    def __init__(self, tiers: Sequence[Tier], *,
+                 size_fn: Optional[Callable[[str, str], float]] = None,
+                 move_fn: Optional[Callable[[str, Optional[str], str], None]] = None,
+                 drop_fn: Optional[Callable[[str, Optional[str]], None]] = None,
+                 victim_fn: Optional[Callable[[str], float]] = None):
+        self.order: List[str] = [t.name for t in tiers]
+        self.tiers: Dict[str, Tier] = {t.name: t for t in tiers}
+        self.size_fn = size_fn
+        self.move_fn = move_fn
+        self.drop_fn = drop_fn
+        self.victim_fn = victim_fn
+        self.placement: Dict[str, str] = {}      # key -> tier name
+        self._sizes: Dict[str, float] = {}       # key -> nominal (raw) nbytes
+        self.demotions = 0
+        self.promotions = 0
+        self.drops = 0
+
+    # ------------------------------------------------------------------
+    def _size(self, key: str, tier: str) -> float:
+        if self.size_fn is not None:
+            return self.size_fn(key, tier)
+        return self._sizes[key]
+
+    def _index(self, tier: str) -> int:
+        return self.order.index(tier)
+
+    # ------------------------------------------------------------------
+    def put(self, key: str, tier: str, *, nbytes: Optional[float] = None
+            ) -> Optional[str]:
+        """Place ``key`` in ``tier`` or the first tier below it that can
+        hold it (after eviction).  Returns the tier the entry actually
+        landed in, or None if it fell off the bottom (dropped, counted)."""
+        if nbytes is not None:
+            self._sizes[key] = nbytes
+        src = self._detach(key)
+        return self._place(key, self._index(tier), src)
+
+    def _place(self, key: str, i: int, src: Optional[str]) -> Optional[str]:
+        while i < len(self.order):
+            t = self.tiers[self.order[i]]
+            nb = self._size(key, t.name)
+            if nb <= t.capacity and self._evict_for(i, nb):
+                if self.move_fn is not None:
+                    self.move_fn(key, src, t.name)
+                t.lru[key] = nb
+                t.used += nb
+                self.placement[key] = t.name
+                return t.name
+            i += 1
+        # fell off the bottom: the entry leaves the store (accounted)
+        self.drops += 1
+        self._sizes.pop(key, None)
+        if self.drop_fn is not None:
+            self.drop_fn(key, src)
+        return None
+
+    def _evict_for(self, i: int, nbytes: float) -> bool:
+        """Make room for ``nbytes`` in tier index ``i`` by demoting victims
+        downward; returns False iff the tier cannot be made to fit (then the
+        caller tries the next tier down — never over-fills this one)."""
+        t = self.tiers[self.order[i]]
+        while t.used + nbytes > t.capacity:
+            victim = self._pick_victim(t)
+            if victim is None:
+                return False
+            vb = t.lru.pop(victim)
+            t.used -= vb
+            del self.placement[victim]
+            self.demotions += 1
+            self._place(victim, i + 1, t.name)
+        return True
+
+    def _pick_victim(self, t: Tier) -> Optional[str]:
+        if not t.lru:
+            return None
+        if self.victim_fn is None:
+            return next(iter(t.lru))
+        # benefit-aware: least benefit first; LRU position breaks ties
+        pos = {k: i for i, k in enumerate(t.lru)}
+        return min(t.lru, key=lambda k: (self.victim_fn(k), pos[k]))
+
+    def _detach(self, key: str) -> Optional[str]:
+        """Remove ``key`` from its current tier (accounting only); returns
+        the tier it was in."""
+        tier = self.placement.pop(key, None)
+        if tier is not None:
+            t = self.tiers[tier]
+            t.used -= t.lru.pop(key)
+        return tier
+
+    # ------------------------------------------------------------------
+    def touch(self, key: str):
+        tier = self.placement.get(key)
+        if tier is not None and key in self.tiers[tier].lru:
+            self.tiers[tier].lru.move_to_end(key)
+
+    def tier_of(self, key: str) -> Optional[str]:
+        return self.placement.get(key)
+
+    def promote(self, key: str, to: str) -> Optional[str]:
+        """Move ``key`` UP to ``to`` (no-op if already at or above it)."""
+        tier = self.placement.get(key)
+        if tier is None or self._index(tier) <= self._index(to):
+            return tier
+        src = self._detach(key)
+        self.promotions += 1
+        return self._place(key, self._index(to), src)
+
+    def remove(self, key: str) -> Optional[str]:
+        """Forget ``key`` entirely (caller owns the payload); returns the
+        tier it occupied."""
+        tier = self._detach(key)
+        self._sizes.pop(key, None)
+        return tier
+
+    # ------------------------------------------------------------------
+    def total_used(self) -> float:
+        return sum(t.used for t in self.tiers.values())
+
+    def audit(self):
+        """Invariants every mutation must preserve: per-tier ``used``
+        equals the sum of its entries, no tier exceeds capacity, and the
+        placement map mirrors tier membership exactly."""
+        for t in self.tiers.values():
+            assert abs(t.used - sum(t.lru.values())) < 1e-6, \
+                f"{t.name}: used {t.used} != sum {sum(t.lru.values())}"
+            assert t.used <= t.capacity + 1e-6, \
+                f"{t.name}: over capacity ({t.used} > {t.capacity})"
+            for k in t.lru:
+                assert self.placement.get(k) == t.name, k
+        for k, tier in self.placement.items():
+            assert k in self.tiers[tier].lru, k

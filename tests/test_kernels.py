@@ -124,3 +124,45 @@ def test_flash_prefill_is_restoration_primitive():
                                            backend="interpret")
     np.testing.assert_allclose(np.asarray(chunk), np.asarray(full[:, c0:]),
                                atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# kv_quant: per-channel int8 quantize/dequantize (storage demotion codec)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [
+    (2, 1, 16, 4, 64),        # (n_attn, B, T, Hkv, Dh) attention KV chunk
+    (2, 1, 16, 96),           # MLA ckv chunk (no head axis)
+    (1, 1, 5, 3, 24),         # ragged tail chunk, non-multiple-of-block dims
+    (300, 8),                 # tall-thin 2D (row padding path)
+])
+def test_kv_quant_kernel_matches_ref(dtype, shape):
+    from repro.kernels.kv_quant import ops as kq_ops, ref as kq_ref
+    x = jax.random.normal(jax.random.fold_in(RNG, sum(shape)), shape, dtype)
+    q_ref, s_ref = kq_ref.kv_quantize_ref(x)
+    q, s = kq_ops.kv_quantize(x, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=1e-6, atol=0)
+    y = kq_ops.kv_dequantize(q, s, dtype, backend="interpret")
+    y_ref = kq_ref.kv_dequantize_ref(q_ref, s_ref, dtype)
+    # 1-ULP slack: interpret-mode lowering may fuse the f32 multiply
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=3e-7, atol=0)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kv_quant_round_trip_error_bound(dtype):
+    """|x - deq(quant(x))| <= 0.5*scale (round-off) + 0.5*scale (target-
+    dtype recast) per channel — the bound ChunkStore.quant_tolerance
+    documents."""
+    from repro.kernels.kv_quant import ops as kq_ops
+    x = jax.random.normal(jax.random.fold_in(RNG, 7), (4, 1, 32, 2, 16), dtype)
+    q, s = kq_ops.kv_quantize(x, backend="ref")
+    y = kq_ops.kv_dequantize(q, s, dtype, backend="ref")
+    err = np.abs(np.asarray(x, np.float32) - np.asarray(y, np.float32))
+    bound = np.asarray(s) * (0.5 if dtype == jnp.float32 else 1.0) + 1e-7
+    assert (err <= bound).all()

@@ -277,7 +277,7 @@ def test_trace_v3_preemption_round_trip_and_replay():
     core = EngineCore(SimBackend(cost), stages=1, io_channels=1,
                       max_active=2, preempt="priority", strict=True)
     res, trace = capture(core, _burst(cfg))
-    assert trace.version == TRACE_VERSION == 3
+    assert trace.version == TRACE_VERSION == 4
     assert trace.preempts() and trace.resumes()
     assert trace.meta["preempt"] == "priority"
     assert replay_trace(trace) == res            # bit-identical, incl. aborts
