@@ -26,7 +26,15 @@ DEFAULTS = dict(hw="h100", bw="10Gbps", arch="qwen3-8b", stages=2,
 
 def sim_ttft(system: str, *, workload="swe_bench", arch=None, hw=None, bw=None,
              stages=None, max_batch=None, n_requests=None, seed=1,
-             requests=None, io_channels=1):
+             requests=None, io_channels=1, admission="continuous",
+             prefetch=False, kvstore=None, kv_tier="host", **engine_kw):
+    """One simulated serving run; returns the (stream-safe) ServingReport.
+
+    Per-request finish events live in ``report.finishes`` and every rate in
+    ``report.stats`` divides by the active serving span — NOT the engine
+    makespan — so the helper is safe for continuous-batching sweeps where
+    the offered stream outlives the measured window (the old makespan
+    denominator silently assumed every request retired at batch close)."""
     cfg = get_config(arch or DEFAULTS["arch"])
     reqs = requests if requests is not None else \
         generate(workload, n_requests or DEFAULTS["n_requests"], seed=seed)
@@ -35,7 +43,8 @@ def sim_ttft(system: str, *, workload="swe_bench", arch=None, hw=None, bw=None,
         io_bandwidth=IO_BANDWIDTHS[bw or DEFAULTS["bw"]],
         system=system, stages=stages if stages is not None else DEFAULTS["stages"],
         max_batch=max_batch if max_batch is not None else DEFAULTS["max_batch"],
-        io_channels=io_channels)
+        io_channels=io_channels, admission=admission, prefetch=prefetch,
+        kvstore=kvstore, kv_tier=kv_tier, **engine_kw)
     return eng.run(reqs)
 
 

@@ -1,0 +1,139 @@
+"""Sustained throughput under continuous batching (DESIGN.md §11).
+
+The headline serving metric is CAPACITY, not makespan: the highest offered
+arrival rate at which the system still meets its first-token SLO, reported
+as sustained completed requests/s at p99 TTFT <= SLO.  Method: sweep the
+``multi_tenant`` workload's peak arrival rate, run the same stream through
+both admission modes —
+
+  * ``gang``        — run-to-completion baseline: the next batch is admitted
+                      only when the whole current batch retires, so arrivals
+                      queue behind the slowest request of the batch and
+                      restoration only ever runs against an idle device;
+  * ``continuous``  — a freed decode slot is refilled mid-flight, so queued
+                      requests restore AGAINST the live decode batch
+                      (decode<->restoration overlap is the mechanism; the
+                      benefit gate prices recompute under decode
+                      interference) —
+
+and take each mode's best sustained rate among the sweep points whose p99
+TTFT meets the SLO (the knee of the latency-throughput curve).  Completion
+rates come from per-request finish events over a warmup/drain-trimmed
+steady-state window, never from makespan (benchmarks/common.py).
+
+Acceptance (asserted, also under --smoke): continuous batching sustains a
+strictly higher req/s at the SLO than gang admission on the same workload,
+with nonzero decode<->restoration overlap at the knee.
+"""
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import DEFAULTS, RESULTS, row, sim_ttft  # noqa: E402
+from repro.config import IO_BANDWIDTHS  # noqa: E402
+from repro.serving import TieredKVStore  # noqa: E402
+from repro.serving.metrics import sustained_throughput  # noqa: E402
+from repro.serving.workloads import multi_tenant  # noqa: E402
+
+SLO_P99_TTFT = 2.0        # interactive-class first-token SLO (seconds)
+RATES = (2.0, 4.0, 8.0, 16.0)
+N_REQUESTS = 96
+SMOKE_RATES = (4.0, 8.0)
+SMOKE_REQUESTS = 36
+
+
+def _serve(admission: str, rate: float, n: int, seed: int = 3):
+    # fresh store per run: reuse hits must come from THIS stream's Zipf
+    # repeats, not a previous sweep point's residue; "remote" start tier
+    # makes restoration (and hence the decode overlap) real
+    reqs = multi_tenant(n, seed=seed, arrival_rate=rate)
+    store = TieredKVStore(remote_bw=IO_BANDWIDTHS[DEFAULTS["bw"]])
+    return reqs, sim_ttft(
+        "cacheflow", requests=reqs, kvstore=store, kv_tier="remote",
+        max_batch=4, admission=admission,
+        prefetch=(admission == "continuous"),
+        decode_interference=0.3 if admission == "continuous" else 0.0)
+
+
+def _sweep(admission: str, rates, n):
+    """One latency-throughput curve: per-rate p99 TTFT + sustained rps."""
+    points = []
+    for rate in rates:
+        reqs, rep = _serve(admission, rate, n)
+        horizon = max(r.arrival for r in reqs)
+        st = sustained_throughput(rep.arrivals, rep.finishes,
+                                  warmup=0.1 * horizon, drain=0.1 * horizon)
+        p99 = float(np.percentile(sorted(rep.ttfts.values()), 99)) \
+            if rep.ttfts else float("inf")
+        points.append({
+            "rate": rate, "p99_ttft": p99,
+            "sustained_rps": st["sustained_rps"],
+            "completed": len(rep.finishes), "offered": len(reqs),
+            "overlap": rep.overlap_decode_restore,
+            "meets_slo": p99 <= SLO_P99_TTFT})
+    return points
+
+
+def _capacity(points):
+    """Sustained rps at the SLO knee (best point that still meets it)."""
+    ok = [p for p in points if p["meets_slo"]]
+    if not ok:
+        return 0.0, None
+    best = max(ok, key=lambda p: p["sustained_rps"])
+    return best["sustained_rps"], best
+
+
+def run(smoke: bool = False):
+    rates = SMOKE_RATES if smoke else RATES
+    n = SMOKE_REQUESTS if smoke else N_REQUESTS
+    curves, rows = {}, []
+    for admission in ("gang", "continuous"):
+        points = _sweep(admission, rates, n)
+        cap, knee = _capacity(points)
+        curves[admission] = {"points": points, "capacity_rps": cap,
+                             "knee": knee}
+        for p in points:
+            rows.append(row(
+                f"throughput/{admission}@{p['rate']:g}rps", p["p99_ttft"],
+                f"sustained={p['sustained_rps']:.3f}rps "
+                f"p99_ttft={p['p99_ttft']:.3f}s "
+                f"overlap={p['overlap']:.2f}s "
+                f"slo={'ok' if p['meets_slo'] else 'MISS'}"))
+    gang, cont = curves["gang"], curves["continuous"]
+    speedup = cont["capacity_rps"] / max(gang["capacity_rps"], 1e-9)
+    rows.append(row(
+        "throughput/capacity", cont["capacity_rps"],
+        f"continuous={cont['capacity_rps']:.3f}rps "
+        f"gang={gang['capacity_rps']:.3f}rps "
+        f"gain={speedup:.2f}x at p99_ttft<={SLO_P99_TTFT:g}s"))
+    with open(os.path.join(RESULTS, "throughput.json"), "w") as f:
+        json.dump({"slo_p99_ttft": SLO_P99_TTFT, **curves}, f, indent=1)
+    # acceptance: continuous batching sustains strictly more load at the
+    # SLO, and the mechanism — restoration overlapping live decode — is
+    # actually engaged at the steady-state knee
+    assert cont["capacity_rps"] > gang["capacity_rps"], \
+        f"continuous {cont['capacity_rps']} <= gang {gang['capacity_rps']}"
+    assert cont["knee"] is not None and cont["knee"]["overlap"] > 0.0, \
+        "no decode<->restoration overlap at the continuous knee"
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="2-rate sweep on a short stream (CI); same "
+                         "acceptance assertions")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for line in run(smoke=args.smoke):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

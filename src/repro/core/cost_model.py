@@ -28,6 +28,12 @@ class CostModel:
     mfu: float = 0.5               # achievable fraction of peak during prefill
     num_chips: int = 1             # chips sharing the recompute (TP group)
     io_channels: int = 1           # parallel I/O channels
+    # fraction of restoration-compute throughput a LIVE decode batch eats
+    # (continuous batching: recurring decode steps timeshare the same chips
+    # as chunk recomputes, so at steady state the compute alternative the
+    # §3.3 benefit gate prices is slower than on an idle device).  0.0 keeps
+    # the classic idle-device pricing.
+    decode_interference: float = 0.0
 
     # ------------------------------------------------------------------
     def flops_recompute(self, n0: int, n1: int) -> float:
@@ -78,7 +84,13 @@ class CostModel:
         continuous batch): HBM-bandwidth-bound — the weights stream once
         per step and each request's KV context is read once — plus the
         fixed kernel overhead.  ``context_lens`` are per-request attended
-        context lengths (capped by the attention window)."""
+        context lengths (capped by the attention window).  The weight-
+        streaming term is paid once per step regardless of batch size, so a
+        PARTIAL batch (requests streaming in/out mid-flight) amortizes it
+        worse — per-request step cost falls as the continuous batch fills.
+        An empty batch costs nothing (no step is issued)."""
+        if not context_lens:
+            return 0.0
         pc = self.cfg.param_counts()
         param_bytes = 2.0 * (pc["active"] - pc["embedding"])   # bf16 weights
         kv = 0.0

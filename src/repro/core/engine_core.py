@@ -17,7 +17,13 @@ batch of concurrent requests through their WHOLE serving lifecycle:
 The loop owns every scheduling concern:
 
   * continuous-batching admission (``max_active``) — a slot is held for the
-    whole lifecycle and freed at DECODE completion, not restore completion,
+    whole lifecycle and freed at DECODE completion, not restore completion;
+    a mid-flight retire refills its slot immediately, so arriving requests
+    restore AGAINST the live decode batch (``admission="gang"`` is the
+    run-to-completion baseline: the next batch joins only at batch close),
+  * queued-request prefetch (``prefetch=True``) — idle channel time
+    promotes the admission queue's chunks up a storage tier ahead of
+    admission (the queue is a known lookahead window),
   * one compute resource per pipeline stage (chunk recomputes and suffix
     prefills serialize on the stage's chips),
   * ``io_channels`` shared transfer channels (contention = queueing, §3.3),
@@ -94,6 +100,54 @@ class EngineResult:
     # "deadline"); aborted/preempted op time is EXCLUDED from the busy
     # fractions above and tagged ":aborted" in ops_log.
     preemptions: Dict[str, int] = field(default_factory=dict)
+    # seconds during which a batched decode step and at least one
+    # restoration op (chunk recompute / KV transfer / queued-request
+    # prefetch) ran simultaneously — the steady-state decode/restoration
+    # overlap continuous batching exists to create.  Derived from ops_log
+    # (see :func:`decode_restore_overlap`), so replay stays bit-identical.
+    overlap_decode_restore: float = 0.0
+
+
+def _merge_intervals(intervals):
+    out: List[List[float]] = []
+    for t0, t1 in sorted(intervals):
+        if out and t0 <= out[-1][1]:
+            out[-1][1] = max(out[-1][1], t1)
+        else:
+            out.append([t0, t1])
+    return out
+
+
+def decode_restore_overlap(ops_log) -> float:
+    """Seconds during which a batched decode step and at least one
+    restoration op — chunk recompute (``:c``), KV transfer (``:l``) or
+    queued-request prefetch (``:pf``); suffix prefills and aborted ops
+    excluded — were simultaneously in flight.  Zero in any schedule that
+    drains the decode batch before restoring the next one (run-to-
+    completion); strictly positive at continuous-batching steady state,
+    where arriving requests restore against the live decode batch."""
+    dec, rest = [], []
+    for t0, t1, resource, desc in ops_log:
+        if desc.endswith(":aborted"):
+            continue
+        if resource == "decode":
+            dec.append((t0, t1))
+            continue
+        tag = desc.rsplit(":", 1)[-1]
+        if tag == "pf" or (tag[:1] in ("c", "l") and tag[1:].isdigit()):
+            rest.append((t0, t1))
+    dec, rest = _merge_intervals(dec), _merge_intervals(rest)
+    total, i, j = 0.0, 0, 0
+    while i < len(dec) and j < len(rest):
+        lo = max(dec[i][0], rest[j][0])
+        hi = min(dec[i][1], rest[j][1])
+        if lo < hi:
+            total += hi - lo
+        if dec[i][1] <= rest[j][1]:
+            i += 1
+        else:
+            j += 1
+    return total
 
 
 # ---------------------------------------------------------------------------
@@ -136,12 +190,31 @@ class EngineBackend:
         raise NotImplementedError
 
     def io_benefit(self, plan: RequestPlan, unit: int,
-                   bandwidth: Optional[float], slowdown: float = 1.0) -> bool:
+                   bandwidth: Optional[float], slowdown: float = 1.0,
+                   decode_load: int = 0) -> bool:
         """Marginal-benefit gate (§3.3); default = eager loading.
         ``slowdown`` is the CANDIDATE CHANNEL's duration multiplier — the
         gate must price the transfer at the channel the unit would actually
-        ride, not the nominal kvstore/default bandwidth."""
+        ride, not the nominal kvstore/default bandwidth.  ``decode_load``
+        is the size of the LIVE decode batch at gate time: at continuous-
+        batching steady state the recompute alternative timeshares the
+        chips with recurring decode steps, so it must be priced against a
+        busy device, not an idle one."""
         return True
+
+    def prefetch_secs(self, op: ScheduledOp, req: EngineRequest,
+                      bandwidth: Optional[float]) -> float:
+        """Duration of a queued-request prefetch (kind == "prefetch"): the
+        admission queue is a known lookahead window, so idle channel time
+        promotes a queued request's chunks up a tier — its admission-time
+        restoration then starts from the faster tier."""
+        raise NotImplementedError
+
+    def prefetch_gate(self, req: EngineRequest) -> bool:
+        """Replay hook: should this queued request be prefetched?  Live
+        runs never ask — the engine consults its KV store directly (and
+        records the answer); only a store-less replay delegates here."""
+        return False
 
     def suspend(self, req: EngineRequest) -> None:
         """Called when the request's restoration is preempted: its
@@ -203,14 +276,28 @@ class SimBackend(EngineBackend):
         return self.cost.t_decode_step(
             [r.n_tokens + r.new_len for r in reqs])
 
+    def prefetch_secs(self, op: ScheduledOp, req: EngineRequest,
+                      bandwidth: Optional[float]) -> float:
+        """Whole-prefix payload at the CURRENT tier's bandwidth (the store
+        reports the queued request's tier at dispatch time; promotion to
+        the faster tier happens when the transfer completes)."""
+        t0, t1 = op.tokens
+        return (t1 - t0) * self.cost.bytes_per_token() \
+            / self._bw(op.request_id, bandwidth)
+
     def io_benefit(self, plan: RequestPlan, unit: int,
-                   bandwidth: Optional[float], slowdown: float = 1.0) -> bool:
+                   bandwidth: Optional[float], slowdown: float = 1.0,
+                   decode_load: int = 0) -> bool:
         """Spend a channel on this unit only if the transfer finishes before
         compute alone could have covered the remaining span through it —
         otherwise loading delays completion (the channel pins the unit).
         The transfer is priced at the candidate channel's EFFECTIVE
         bandwidth (nominal / slowdown): a degraded channel must not pass a
-        gate its real transfer time would fail."""
+        gate its real transfer time would fail.  With a LIVE decode batch
+        (``decode_load`` > 0) the recompute alternative is priced against a
+        busy device: recurring decode steps eat ``cost.decode_interference``
+        of the restoration-compute throughput, so transfers that would lose
+        to an idle device's recompute can still win at steady state."""
         if not self.benefit_gate:
             return True
         if not plan.plan.comp_enabled:
@@ -236,6 +323,8 @@ class SimBackend(EngineBackend):
                          / (self.cost.hw.peak_flops * self.cost.mfu
                             * self.cost.num_chips)
                          + self.cost.hw.kernel_overhead_s)
+        if decode_load > 0 and self.cost.decode_interference > 0.0:
+            comp_secs /= 1.0 - min(self.cost.decode_interference, 0.999)
         return io_secs < comp_secs
 
 
@@ -305,6 +394,16 @@ class RealBackend(EngineBackend):
         self.executor.execute_op(op)
         return 0.0
 
+    def prefetch_secs(self, op: ScheduledOp, req: EngineRequest,
+                      bandwidth: Optional[float]) -> float:
+        # the byte movement happens at completion (the engine promotes the
+        # queued request through the chunk store); synthetic durations shape
+        # the schedule for interleaving tests, measured mode charges the
+        # host-side copy as near-instant background work
+        if self.dur_fn is not None:
+            return max(1e-12, float(self.dur_fn(op)))
+        return 1e-9
+
     def suspend(self, req: EngineRequest) -> None:
         # park the partially-restored cache off-device; finalize_restore
         # (recurrent-state fix-up) must NOT run — restoration is incomplete
@@ -373,9 +472,30 @@ class EngineCore:
     sit in device HBM (a dedup hit — another request restored the shared
     prefix, or the payload never left HBM) dispatches at ZERO channel cost
     (real backends still execute the device-local copy), and the benefit
-    gate passes it unconditionally."""
+    gate passes it unconditionally.
+
+    admission picks the batching discipline:
+
+      * "continuous" (default) — requests stream into and out of the batch
+        every step: an arrival takes any free slot immediately, a slot freed
+        by a mid-flight retire (DECODE completion) is refilled on the spot,
+        so queued/arriving requests restore AGAINST the live decode batch
+        on the shared compute/I/O resources.  The benefit gate prices the
+        recompute alternative at the live decode load (``decode_load``).
+      * "gang" — the run-to-completion baseline: arrivals only join at
+        batch close.  The next gang (up to ``max_active``) is admitted when
+        the current one fully drains, so cross-batch decode/restoration
+        overlap is structurally zero.  Incompatible with preemption.
+
+    prefetch=True uses idle channel time on the admission queue (a known
+    lookahead window): a queued request whose prefix sits below
+    ``promote_tier`` gets its chunks promoted up BEFORE admission, so
+    admission-time restoration starts from the faster tier.  Each queued
+    request is considered once (FCFS); the decision is recorded in traces
+    (``prefetch_gate``) so replay re-derives it without the store."""
 
     PREEMPT_POLICIES = ("none", "priority", "deadline")
+    ADMISSION_MODES = ("continuous", "gang")
 
     def __init__(self, backend: EngineBackend, *, stages: int = 1,
                  io_channels: int = 1, io_policy: str = "longest_remaining",
@@ -384,10 +504,19 @@ class EngineCore:
                  stage_parallel: bool = True, max_active: int = 0,
                  kvstore=None, promote_tier: str = "host",
                  preempt: str = "none", evict: bool = False,
+                 admission: str = "continuous", prefetch: bool = False,
                  strict: bool = False):
         if preempt not in self.PREEMPT_POLICIES:
             raise ValueError(f"unknown preempt policy {preempt!r}; "
                              f"known: {self.PREEMPT_POLICIES}")
+        if admission not in self.ADMISSION_MODES:
+            raise ValueError(f"unknown admission mode {admission!r}; "
+                             f"known: {self.ADMISSION_MODES}")
+        if admission == "gang" and preempt != "none":
+            raise ValueError(
+                "admission='gang' is the run-to-completion baseline — a "
+                "closed batch has no admission pressure to preempt for; "
+                "use admission='continuous' with preempt=...")
         self.backend = backend
         self.stages = stages
         self.io_channels = io_channels
@@ -400,6 +529,8 @@ class EngineCore:
         self.promote_tier = promote_tier
         self.preempt = preempt
         self.evict = evict
+        self.admission = admission
+        self.prefetch = prefetch
         self.strict = strict
 
     def _bandwidth(self, rid: str) -> Optional[float]:
@@ -439,11 +570,15 @@ class EngineCore:
             if self._resident(p.request_id, tokens, layers):
                 ok = True               # resident chunks transfer for free
             else:
+                # priced against the LIVE decode batch, not an idle device:
+                # at steady state recompute timeshares with decode steps
                 ok = self.backend.io_benefit(p, u,
                                              self._bandwidth(p.request_id),
-                                             slowdown=gate_slowdown[0])
+                                             slowdown=gate_slowdown[0],
+                                             decode_load=len(decoding))
             if trace is not None:
-                trace.record_gate(now, p.request_id, p.stage, u, ok)
+                trace.record_gate(now, p.request_id, p.stage, u, ok,
+                                  decode_load=len(decoding))
             return ok
 
         sched = BatchScheduler(io_policy=self.io_policy, benefit_fn=benefit)
@@ -482,6 +617,16 @@ class EngineCore:
         preemptions: Dict[str, int] = {}
         outstanding: Dict[str, List[list]] = {}
         aborted_ids: set = set()
+        # queued-request prefetch (admission-queue lookahead): rid ->
+        # "done" | "resident" (already at/above promote_tier) | an inflight
+        # record [c, op, dur, log_idx].  Each queued request is gated at
+        # most once, so trace size stays bounded and replay re-derives the
+        # same query sequence.  An inflight prefetch whose target is
+        # admitted is ABORTED (channel freed, elapsed time becomes waste):
+        # the half-done promotion can't serve restoration, and letting the
+        # background transfer pin the channel would starve the foreground
+        # loads it was meant to accelerate.
+        prefetch_state: Dict[str, object] = {}
 
         def stage_unblocked(op_stage: int, rid: str) -> bool:
             if self.stage_parallel:
@@ -492,6 +637,46 @@ class EngineCore:
                 if p is not None and not p.plan.done:
                     return False
             return True
+
+        def try_prefetch(c: int) -> bool:
+            """Idle channel + a known lookahead window (the admission
+            queue): promote the oldest queued request still below
+            ``promote_tier`` so its restoration starts from the faster
+            tier.  Returns True iff a prefetch was dispatched on ``c``."""
+            if not self.prefetch:
+                return False
+            for r in pending:
+                rid = r.request_id
+                if rid in prefetch_state:
+                    continue
+                if self.kvstore is not None and hasattr(self.kvstore, "tier_of"):
+                    tier = self.kvstore.tier_of(rid)
+                    ok = tier is not None \
+                        and tier not in ("hbm", self.promote_tier)
+                else:
+                    # store-less replay: the recorded answer stands
+                    ok = self.backend.prefetch_gate(r)
+                if trace is not None:
+                    trace.record_prefetch_gate(now, rid, ok)
+                if not ok:
+                    prefetch_state[rid] = "resident"
+                    continue
+                op = ScheduledOp("prefetch", rid, -1, 0, (0, r.n_tokens),
+                                 (0, 0))
+                bw = self._bandwidth(rid)
+                dur = self.backend.prefetch_secs(op, r, bw) \
+                    * self.slow.get(c, 1.0)
+                io_free[c] = False
+                busy_io[c] += dur
+                log_idx = len(ops_log)
+                prefetch_state[rid] = [c, op, dur, log_idx]
+                ops_log.append((now, now + dur, f"io{c}", f"{rid}:pf"))
+                if trace is not None:
+                    trace.record_dispatch(now, f"io{c}", op, dur, bw)
+                heapq.heappush(events, (now + dur, next(counter),
+                                        "prefetch_done", (c, op, dur, log_idx)))
+                return True
+            return False
 
         def dispatch():
             nonlocal decode_free, busy_decode, decode_steps
@@ -538,6 +723,9 @@ class EngineCore:
                 while io_free[c] and c not in failed:
                     op = sched.next_io(skip=io_blocked)
                     if op is None:
+                        # no restoration transfer wants the channel: spend
+                        # the idle time prefetching for the admission queue
+                        try_prefetch(c)
                         break
                     if not stage_unblocked(op.stage, op.request_id):
                         sched.plans[(op.request_id, op.stage)].plan.release_io()
@@ -583,9 +771,23 @@ class EngineCore:
                 heapq.heappush(events, (now + dur, next(counter), "decode_done", rids))
 
         def admit(r: EngineRequest):
+            st = prefetch_state.get(r.request_id)
+            if isinstance(st, list):
+                # the prefetch lost the race with admission: cancel it so
+                # the channel serves this request's restoration instead
+                c, op, dur, log_idx = st
+                del prefetch_state[r.request_id]
+                aborted_ids.add(id(op))
+                io_free[c] = True
+                busy_io[c] -= dur
+                t0, _, rn, desc = ops_log[log_idx]
+                ops_log[log_idx] = (t0, now, rn, desc + ":aborted")
+                if trace is not None:
+                    trace.record_abort(now, f"io{c}", op)
             reqs[r.request_id] = r
             active.add(r.request_id)
-            sched.add_request(r.plans)
+            sched.add_request(r.plans, priority=r.priority,
+                              deadline=r.deadline)
             self.backend.admit(r)
             if trace is not None:
                 trace.record_admit(now, r.request_id)
@@ -659,7 +861,16 @@ class EngineCore:
 
         def refill():
             """A slot freed: re-admit the most urgent of {suspended, queued}.
-            preempt="none" keeps the classic FCFS deque behavior."""
+            preempt="none" keeps the classic FCFS deque behavior.  Gang
+            (run-to-completion) admission instead waits for batch close:
+            the next gang joins only once the active set fully drains."""
+            if self.admission == "gang":
+                if active:
+                    return
+                while pending and (not self.max_active
+                                   or len(active) < self.max_active):
+                    admit(pending.popleft())
+                return
             while pending or suspended:
                 if self.max_active and len(active) >= self.max_active:
                     return
@@ -724,7 +935,12 @@ class EngineCore:
             now, _, kind, payload = heapq.heappop(events)
             if kind == "arrive":
                 r: EngineRequest = payload
-                if self.max_active and len(active) >= self.max_active:
+                if self.admission == "gang":
+                    # run-to-completion baseline: arrivals only ever join
+                    # at batch close, never a live batch
+                    pending.append(r)
+                    refill()
+                elif self.max_active and len(active) >= self.max_active:
                     if self.preempt != "none" and try_preempt(r):
                         admit(r)
                     else:
@@ -791,6 +1007,31 @@ class EngineCore:
                     if decoding[rid] <= 0:
                         del decoding[rid]
                         finish_request(rid)
+            elif kind == "prefetch_done":
+                c, op, dur, log_idx = payload
+                rid = op.request_id
+                if id(op) in aborted_ids:
+                    # cancelled at admission: the channel was freed (and
+                    # possibly re-dispatched) back then — nothing to do
+                    aborted_ids.discard(id(op))
+                    dispatch()
+                    continue
+                io_free[c] = True
+                if c in failed:
+                    # the channel died mid-prefetch: background work, so
+                    # just roll the time back and allow a retry elsewhere
+                    busy_io[c] -= dur
+                    t0, t1, rn, desc = ops_log[log_idx]
+                    ops_log[log_idx] = (t0, t1, rn, desc + ":aborted")
+                    prefetch_state.pop(rid, None)
+                    if trace is not None:
+                        trace.record_abort(now, f"io{c}", op)
+                else:
+                    prefetch_state[rid] = "done"
+                    if self.kvstore is not None:
+                        self.kvstore.promote(rid, self.promote_tier)
+                    if trace is not None:
+                        trace.record_complete(now, f"io{c}", op)
             dispatch()
 
         if self.strict and (pending or active or suspended):
@@ -812,6 +1053,7 @@ class EngineCore:
             decode_steps=decode_steps,
             ops_log=ops_log,
             preemptions=preemptions,
+            overlap_decode_restore=decode_restore_overlap(ops_log),
         )
         if trace is not None:
             trace.finish(result)
@@ -833,6 +1075,8 @@ class EngineCore:
             "promote_tier": self.promote_tier,
             "preempt": self.preempt,
             "evict": self.evict,
+            "admission": self.admission,
+            "prefetch": self.prefetch,
         }
 
 

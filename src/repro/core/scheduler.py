@@ -25,6 +25,7 @@ measured for performance and checked for correctness.
 from __future__ import annotations
 
 import heapq
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -70,6 +71,12 @@ class BatchScheduler:
     # arrival sequence number per request (sort key + membership), plans
     # bucketed by stage (compute dispatch) and by request (request_done).
     arrival_index: Dict[str, int] = field(default_factory=dict)
+    # SLO class per request (continuous arrivals): a higher-priority /
+    # tighter-deadline request's transfers jump a congested channel queue —
+    # its urgency leads the longest_remaining dispatch key.  Defaults
+    # (priority 0, no deadline) reproduce the classic ordering exactly.
+    priority: Dict[str, int] = field(default_factory=dict)
+    deadline: Dict[str, float] = field(default_factory=dict)
     # requests preempted mid-restoration: claims released, no candidates
     # generated until resume() (engine-core preemption policy drives this)
     suspended: set = field(default_factory=set)
@@ -90,12 +97,17 @@ class BatchScheduler:
     _restored: set = field(default_factory=set)
 
     # ------------------------------------------------------------------
-    def add_request(self, plans: List[RequestPlan]):
+    def add_request(self, plans: List[RequestPlan], *, priority: int = 0,
+                    deadline: float = math.inf):
         rid = plans[0].request_id
         if rid not in self.arrival_index:
             self.arrival_index[rid] = self._arrival_seq
             heapq.heappush(self._head_heap, (self._arrival_seq, rid))
             self._arrival_seq += 1
+        if priority:
+            self.priority[rid] = priority
+        if math.isfinite(deadline):
+            self.deadline[rid] = deadline
         self._by_rid[rid] = list(plans)
         for p in plans:
             self.plans[(rid, p.stage)] = p
@@ -105,6 +117,8 @@ class BatchScheduler:
         # O(stages): every index is a dict/set keyed by rid (the head heap
         # drops its entry lazily on peek)
         self.arrival_index.pop(rid, None)
+        self.priority.pop(rid, None)
+        self.deadline.pop(rid, None)
         self._restored.discard(rid)
         self.suspended.discard(rid)
         self._prefill.pop(rid, None)
@@ -233,14 +247,20 @@ class BatchScheduler:
             return None
         if self.io_policy == "longest_remaining":
             # Batch-aware two-pointer priority (§3.3), operationalised for
-            # FCFS chunked-prefill compute: (1) the compute-head request's
+            # FCFS chunked-prefill compute: (0) a strictly more urgent SLO
+            # class (higher priority, then earlier first-token deadline)
+            # jumps the channel queue — under continuous arrivals a
+            # deadline-tight request must not wait behind a bulk request's
+            # long restoration; then (1) the compute-head request's
             # transfers are on the TTFT critical path — serve them first;
             # (2) surplus channel time prefetches the request with the
             # largest remaining restoration (highest marginal recompute
             # saving under quadratic attention), which is what shrinks the
             # tail (paper Fig. 4 P90–P99).
             head = self._restoration_head()
-            cands.sort(key=lambda p: (p.request_id != head,
+            cands.sort(key=lambda p: (-self.priority.get(p.request_id, 0),
+                                      self.deadline.get(p.request_id, math.inf),
+                                      p.request_id != head,
                                       -p.remaining_io_tokens(),
                                       self.arrival_index[p.request_id]))
         elif self.io_policy == "shortest_remaining":

@@ -45,6 +45,17 @@ Schema v3 adds preemption (DESIGN.md §9): requests carry their SLO class
 pressure.  Replay does not pin those decisions — they re-derive
 deterministically from the pinned durations and recorded priorities, and
 the bit-identity check covers ``EngineResult.preemptions``.
+
+Schema v5 covers continuous batching (DESIGN.md §11): meta carries the
+``admission`` mode and ``prefetch`` flag, gate events carry the live
+``decode_load`` the benefit was priced against, and two new capture points
+pin the queued-request prefetch path — ``prefetch_gate`` events record the
+tier check that decided whether a queued request's chunks were worth
+promoting (the KV store is absent at replay time, so the answer must be
+pinned), and prefetch transfers appear as ordinary ``dispatch`` events with
+op kind ``prefetch``.  Admissions/retires were already step-granular
+(``admit``/``finish`` events); v4 traces upgrade with
+admission="continuous"/prefetch=False, which reproduces them exactly.
 """
 from __future__ import annotations
 
@@ -54,7 +65,7 @@ from dataclasses import asdict, dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.engine_core import (EngineBackend, EngineCore, EngineRequest,
-                                    EngineResult)
+                                    EngineResult, decode_restore_overlap)
 from repro.core.plans import RequestPlan
 from repro.core.scheduler import ScheduledOp
 
@@ -79,7 +90,17 @@ from repro.core.scheduler import ScheduledOp
 #:       store).  No new events — ``preempt``/``resume`` cover both modes;
 #:       replay re-derives the restart from the flag.  v3 traces upgrade
 #:       with evict=False (park mode), reproducing their runs exactly.
-TRACE_VERSION = 4
+#:   5 — continuous batching: meta carries the ``admission`` mode
+#:       ("continuous"/"gang") and the ``prefetch`` flag; ``gate`` events
+#:       carry ``decode_load`` (live decode batch size the benefit gate
+#:       priced against; omitted when 0); new ``prefetch_gate`` events pin
+#:       the is-it-below-the-promote-tier answer for queued-request
+#:       prefetch, and prefetch transfers are ``dispatch`` events with op
+#:       kind ``prefetch``.  v4 traces upgrade with admission="continuous"
+#:       and prefetch=False — no prefetch decisions were taken and
+#:       decode_load never changed a recorded gate answer, so replay is
+#:       unchanged.
+TRACE_VERSION = 5
 
 
 class TraceVersionError(ValueError):
@@ -99,23 +120,25 @@ class ReplayDivergence(RuntimeError):
 @dataclass
 class TraceEvent:
     """One engine-core decision.  ``kind`` ∈ {admit, gate, dispatch,
-    complete, abort, fail, done, decode_step, finish, preempt, resume};
-    unused fields stay None (and are dropped from the JSON form).  ``done``
-    marks restoration complete; ``finish`` marks the whole lifecycle
-    complete (slot freed); ``preempt``/``resume`` mark a restoration
-    suspended under admission pressure / re-admitted to a freed slot."""
+    complete, abort, fail, done, decode_step, finish, preempt, resume,
+    prefetch_gate}; unused fields stay None (and are dropped from the JSON
+    form).  ``done`` marks restoration complete; ``finish`` marks the whole
+    lifecycle complete (slot freed); ``preempt``/``resume`` mark a
+    restoration suspended under admission pressure / re-admitted to a freed
+    slot; ``prefetch_gate`` pins the promote-this-queued-request decision."""
     kind: str
     t: float
     resource: Optional[str] = None       # dispatch/complete/abort: comp{s}|io{c}
     op: Optional[dict] = None            # dispatch/complete/abort
     duration: Optional[float] = None     # dispatch/decode_step: pinned secs
     bandwidth: Optional[float] = None    # dispatch (I/O): dispatch-time bytes/s
-    request_id: Optional[str] = None     # admit/done/finish/gate
+    request_id: Optional[str] = None     # admit/done/finish/gate/prefetch_gate
     stage: Optional[int] = None          # gate
     unit: Optional[int] = None           # gate
-    allowed: Optional[bool] = None       # gate
+    allowed: Optional[bool] = None       # gate/prefetch_gate
     channel: Optional[int] = None        # fail
     requests: Optional[List[str]] = None  # decode_step: batched rids (sorted)
+    decode_load: Optional[int] = None    # gate: live decode batch size (v5)
 
     def to_dict(self) -> dict:
         return {k: v for k, v in asdict(self).items() if v is not None}
@@ -159,12 +182,19 @@ def result_to_dict(res: EngineResult) -> dict:
             "decode_busy": res.decode_busy,
             "decode_steps": res.decode_steps,
             "ops_log": [list(e) for e in res.ops_log],
-            "preemptions": dict(res.preemptions)}
+            "preemptions": dict(res.preemptions),
+            "overlap_decode_restore": res.overlap_decode_restore}
 
 
 def result_from_dict(d: dict) -> EngineResult:
     # v1 results predate the lifecycle: no first token was produced and the
     # lifecycle finished at restore completion
+    ops_log = [tuple(e) for e in d["ops_log"]]
+    overlap = d.get("overlap_decode_restore")
+    if overlap is None:
+        # pre-v5 results: the overlap is a pure function of the ops log, so
+        # recompute it — bit-identity against a fresh replay still holds
+        overlap = decode_restore_overlap(ops_log)
     return EngineResult(
         restore_finish=dict(d["restore_finish"]),
         restore_start=dict(d["restore_start"]),
@@ -175,8 +205,9 @@ def result_from_dict(d: dict) -> EngineResult:
         io_busy=d["io_busy"],
         decode_busy=d.get("decode_busy", 0.0),
         decode_steps=d.get("decode_steps", 0),
-        ops_log=[tuple(e) for e in d["ops_log"]],
-        preemptions=dict(d.get("preemptions") or {}))
+        ops_log=ops_log,
+        preemptions=dict(d.get("preemptions") or {}),
+        overlap_decode_restore=overlap)
 
 
 @dataclass
@@ -214,6 +245,13 @@ class ScheduleTrace:
     def resumes(self) -> List[TraceEvent]:
         return [e for e in self.events if e.kind == "resume"]
 
+    def prefetch_gates(self) -> List[TraceEvent]:
+        return [e for e in self.events if e.kind == "prefetch_gate"]
+
+    def prefetches(self) -> List[TraceEvent]:
+        return [e for e in self.events
+                if e.kind == "dispatch" and e.op["kind"] == "prefetch"]
+
     def rebuild_requests(self) -> List[EngineRequest]:
         """Fresh EngineRequests (pointers at origin) from the recorded specs."""
         return [EngineRequest(r["request_id"], r["n_tokens"], r["arrival"],
@@ -237,15 +275,17 @@ class ScheduleTrace:
         if version is None:
             raise TraceVersionError(
                 "trace has no schema version; refusing to guess its format")
-        if version not in (1, 2, 3, TRACE_VERSION):
+        if version not in (1, 2, 3, 4, TRACE_VERSION):
             raise TraceVersionError(
                 f"unsupported trace schema version {version}; this loader "
-                f"reads versions 1-3 (upgraded) and {TRACE_VERSION}")
-        # v1 (pre-lifecycle) and v2 (pre-preemption) traces upgrade
-        # implicitly: rebuild_requests and result_from_dict default the
-        # missing lifecycle extents / priorities / preemption fields, and a
-        # missing meta "preempt" key replays as "none" — so v1 collapses to
-        # RESTORING -> DONE and v2 keeps its exact FCFS-only admission
+                f"reads versions 1-4 (upgraded) and {TRACE_VERSION}")
+        # v1 (pre-lifecycle), v2 (pre-preemption), v3 (pre-eviction) and v4
+        # (pre-continuous-batching) traces upgrade implicitly:
+        # rebuild_requests and result_from_dict default the missing
+        # lifecycle extents / priorities / preemption / overlap fields, and
+        # missing meta keys replay as preempt="none", evict=False,
+        # admission="continuous", prefetch=False — so v1 collapses to
+        # RESTORING -> DONE and v2+ keep their exact recorded admission
         fail_at = d["meta"].get("channel_fail_at") or {}
         meta = dict(d["meta"])
         # JSON stringifies int dict keys; coerce them back
@@ -310,9 +350,13 @@ class TraceRecorder:
         self._ev(kind="admit", t=t, request_id=rid)
 
     def record_gate(self, t: float, rid: str, stage: int, unit: int,
-                    allowed: bool):
+                    allowed: bool, decode_load: int = 0):
         self._ev(kind="gate", t=t, request_id=rid, stage=stage, unit=unit,
-                 allowed=allowed)
+                 allowed=allowed,
+                 decode_load=decode_load if decode_load else None)
+
+    def record_prefetch_gate(self, t: float, rid: str, allowed: bool):
+        self._ev(kind="prefetch_gate", t=t, request_id=rid, allowed=allowed)
 
     def record_dispatch(self, t: float, resource: str, op: ScheduledOp,
                         duration: float, bandwidth: Optional[float]):
@@ -380,12 +424,14 @@ class ReplayBackend(EngineBackend):
         self._dispatches = trace.dispatches()
         self._gates = trace.gates()
         self._decodes = trace.decode_steps()
+        self._pgates = trace.prefetch_gates()
         self._di = 0
         self._gi = 0
         self._dci = 0
+        self._pgi = 0
 
     # -- helpers --------------------------------------------------------
-    def _pop_dispatch(self, op: ScheduledOp) -> float:
+    def _pop_dispatch(self, op: ScheduledOp, execute: bool = True) -> float:
         if self._di >= len(self._dispatches):
             raise ReplayDivergence(
                 f"replay dispatched {op} past the end of the trace "
@@ -399,7 +445,7 @@ class ReplayBackend(EngineBackend):
             raise ReplayDivergence(
                 f"replay dispatch #{self._di - 1} diverged: engine issued "
                 f"{got}, trace recorded {want}")
-        if self.executor is not None:
+        if self.executor is not None and execute:
             self.executor.execute_op(op)
         return e.duration
 
@@ -417,6 +463,26 @@ class ReplayBackend(EngineBackend):
 
     def prefill_secs(self, op: ScheduledOp, req: EngineRequest) -> float:
         return self._pop_dispatch(op)
+
+    def prefetch_secs(self, op: ScheduledOp, req: EngineRequest,
+                      bandwidth: Optional[float]) -> float:
+        # tier promotion happens inside the KV store, which is absent at
+        # replay time — pin the duration but execute nothing on device
+        return self._pop_dispatch(op, execute=False)
+
+    def prefetch_gate(self, req: EngineRequest) -> bool:
+        if self._pgi >= len(self._pgates):
+            raise ReplayDivergence(
+                f"replay prefetch-gate query ({req.request_id}) past the "
+                f"end of the trace ({len(self._pgates)} recorded)")
+        e = self._pgates[self._pgi]
+        self._pgi += 1
+        if e.request_id != req.request_id:
+            raise ReplayDivergence(
+                f"replay prefetch gate #{self._pgi - 1} diverged: engine "
+                f"asked about {req.request_id}, trace recorded "
+                f"{e.request_id}")
+        return e.allowed
 
     def decode_secs(self, reqs: List[EngineRequest]) -> float:
         rids = [r.request_id for r in reqs]
@@ -454,7 +520,8 @@ class ReplayBackend(EngineBackend):
                 self.executor.begin_restore(req.request_id, plans=req.plans)
 
     def io_benefit(self, plan: RequestPlan, unit: int,
-                   bandwidth: Optional[float], slowdown: float = 1.0) -> bool:
+                   bandwidth: Optional[float], slowdown: float = 1.0,
+                   decode_load: int = 0) -> bool:
         if self._gi >= len(self._gates):
             raise ReplayDivergence(
                 f"replay gate query ({plan.request_id}, stage {plan.stage}, "
@@ -490,6 +557,10 @@ class ReplayBackend(EngineBackend):
             raise ReplayDivergence(
                 f"replay consumed {self._dci}/{len(self._decodes)} "
                 f"recorded decode steps")
+        if self._pgi != len(self._pgates):
+            raise ReplayDivergence(
+                f"replay consumed {self._pgi}/{len(self._pgates)} "
+                f"recorded prefetch-gate answers")
 
 
 def replay_core(trace: ScheduleTrace, backend: EngineBackend,
@@ -504,6 +575,8 @@ def replay_core(trace: ScheduleTrace, backend: EngineBackend,
         channel_fail_at=dict(m.get("channel_fail_at") or {}),
         stage_parallel=m["stage_parallel"], max_active=m["max_active"],
         preempt=m.get("preempt", "none"), evict=m.get("evict", False),
+        admission=m.get("admission", "continuous"),
+        prefetch=m.get("prefetch", False),
         strict=strict)
 
 

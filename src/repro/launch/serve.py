@@ -156,6 +156,18 @@ def main():
                     help="admission-pressure policy: suspend the least-"
                          "beneficial in-flight restoration for a more "
                          "urgent arrival (resumes on a freed slot)")
+    ap.add_argument("--admission", default="continuous",
+                    choices=["continuous", "gang"],
+                    help="'continuous' streams arrivals into freed decode "
+                         "slots mid-flight (restoration overlaps the live "
+                         "decode batch); 'gang' is the run-to-completion "
+                         "baseline — the next batch is admitted only when "
+                         "the whole current batch retires")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="promote queued requests' KV up a storage tier on "
+                         "idle channel time (the admission queue is a known "
+                         "lookahead window), so admission-time restoration "
+                         "starts from the faster tier")
     ap.add_argument("--burst-size", type=int, default=3,
                     help="bursty_priority workload: urgent requests per burst")
     ap.add_argument("--burst-every", type=float, default=4.0,
@@ -195,6 +207,11 @@ def main():
                          "on-device with per-request cache verification")
     args = ap.parse_args()
 
+    if args.admission == "gang" and args.preempt != "none":
+        raise SystemExit("--admission gang is the run-to-completion "
+                         "baseline: no mid-flight admission, so preemption "
+                         "policies do not apply (drop --preempt)")
+
     if args.replay:
         _replay(args)
         return
@@ -218,6 +235,8 @@ def main():
                                 max_batch=args.max_batch,
                                 io_channels=args.io_channels,
                                 preempt=args.preempt, evict=args.evict,
+                                admission=args.admission,
+                                prefetch=args.prefetch,
                                 kvstore=store)
         decode_len = args.decode_len if args.decode_len >= 0 else 8
         # with a preemption policy armed, stagger arrivals and mark every
@@ -236,11 +255,13 @@ def main():
         if recorder is not None:
             _save_trace(recorder, args.trace_out, arch=args.arch)
         out = {"system": args.system, "mode": "real",
+               "admission": args.admission,
                "lifecycle": rep.stats,
                "preemptions": sum(rep.preemptions.values()),
                "compute_busy": round(rep.compute_busy, 3),
                "io_busy": round(rep.io_busy, 3),
-               "decode_busy": round(rep.decode_busy, 3)}
+               "decode_busy": round(rep.decode_busy, 3),
+               "overlap_decode_restore": round(rep.overlap_decode_restore, 3)}
         if store is not None:
             out["storage"] = {
                 "chunks": len(store.chunks), "dedup_hits": store.dedup_hits,
@@ -271,7 +292,8 @@ def main():
                            max_batch=args.max_batch, kvstore=store,
                            io_channels=args.io_channels,
                            preempt=args.preempt, evict=args.evict,
-                           kv_tier=args.kv_tier)
+                           kv_tier=args.kv_tier, admission=args.admission,
+                           prefetch=args.prefetch)
     rep = eng.run(reqs, trace=recorder)
     if recorder is not None:
         _save_trace(recorder, args.trace_out, arch=args.arch)
@@ -279,11 +301,14 @@ def main():
         "system": args.system, "workload": args.workload,
         "bandwidth": args.bandwidth, "hardware": args.hardware,
         "stages": args.stages, "preempt": args.preempt,
+        "admission": args.admission,
         "lifecycle": rep.stats,
         "preemptions": sum(rep.preemptions.values()),
         "compute_busy": round(rep.compute_busy, 3),
         "io_busy": round(rep.io_busy, 3),
-        "decode_busy": round(rep.decode_busy, 3)}, indent=1))
+        "decode_busy": round(rep.decode_busy, 3),
+        "overlap_decode_restore": round(rep.overlap_decode_restore, 3)},
+        indent=1))
 
 
 if __name__ == "__main__":

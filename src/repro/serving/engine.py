@@ -54,6 +54,10 @@ class ServingReport:
     tpots: Dict[str, float] = field(default_factory=dict)     # per output token
     decode_busy: float = 0.0
     preemptions: Dict[str, int] = field(default_factory=dict)  # rid -> count
+    finishes: Dict[str, float] = field(default_factory=dict)   # rid -> engine t
+    arrivals: Dict[str, float] = field(default_factory=dict)   # rid -> engine t
+    overlap_decode_restore: float = 0.0   # secs decode and restoration ran
+                                          # concurrently (steady-state metric)
 
     def __post_init__(self):
         if not self.stats:
@@ -62,11 +66,18 @@ class ServingReport:
 
 def _fill_lifecycle(requests: List[Request], res: EngineResult):
     """Map engine-clock lifecycle times back onto the Request objects and
-    derive the per-request serving metrics."""
+    derive the per-request serving metrics.
+
+    Stream-safe: completion comes from the engine's PER-REQUEST ``finish``
+    events — a request that never retired (e.g. the run was truncated) is
+    left un-finalized instead of being back-filled from restore completion,
+    so downstream rates never count phantom completions."""
     ttfts, restore_secs, e2e, tpots = {}, {}, {}, {}
+    arrivals, finishes = {}, {}
     total_tokens = 0
     for r in requests:
         rid = r.request_id
+        arrivals[rid] = r.arrival
         fin = res.restore_finish.get(rid)
         if fin is None:
             continue
@@ -74,17 +85,22 @@ def _fill_lifecycle(requests: List[Request], res: EngineResult):
         r.t_restore_start, r.t_restore_end = start, fin
         restore_secs[rid] = fin - start
         ft = res.first_token.get(rid)
-        done = res.finish.get(rid, fin)
-        r.t_first_token, r.t_done = ft, done
-        r.phase = Phase.DONE
         if ft is not None:
+            r.t_first_token = ft
             ttfts[rid] = ft - r.arrival
+        done = res.finish.get(rid)
+        if done is None:
+            # restored but never retired — still mid-lifecycle
+            continue
+        r.t_done = done
+        r.phase = Phase.DONE
+        finishes[rid] = done
         e2e[rid] = done - r.arrival
         n_out = r.decode_len if r.decode_len > 0 else (1 if r.new_len else 0)
         total_tokens += n_out
         if ft is not None and n_out > 1:
             tpots[rid] = (done - ft) / (n_out - 1)
-    return ttfts, restore_secs, e2e, tpots, total_tokens
+    return ttfts, restore_secs, e2e, tpots, total_tokens, arrivals, finishes
 
 
 # ---------------------------------------------------------------------------
@@ -101,13 +117,15 @@ class SimServingEngine:
                  kvstore: Optional[TieredKVStore] = None,
                  channel_slowdown=None, channel_fail_at=None,
                  preempt: str = "none", evict: bool = False,
-                 kv_tier: str = "host"):
+                 kv_tier: str = "host", admission: str = "continuous",
+                 prefetch: bool = False, decode_interference: float = 0.0):
         self.cfg = cfg
         self.system = system
         self.stages = stages
         self.chunk_size = chunk_size
         self.cost = CostModel(cfg, hw, io_bandwidth, mfu=mfu, num_chips=num_chips,
-                              io_channels=1)
+                              io_channels=1,
+                              decode_interference=decode_interference)
         self.l_delta = l_delta if l_delta is not None else self.cost.crossover_l_delta()
         self.io_channels = io_channels
         self.max_batch = max_batch
@@ -120,6 +138,8 @@ class SimServingEngine:
         # "remote" the paper's cold disaggregated-store regime where
         # restoration time (and hence admission pressure) is real
         self.kv_tier = kv_tier
+        self.admission = admission
+        self.prefetch = prefetch
 
     def _make_core(self) -> EngineCore:
         kw = sim_kwargs(self.system)
@@ -129,6 +149,7 @@ class SimServingEngine:
             channel_slowdown=self.channel_slowdown,
             channel_fail_at=self.channel_fail_at,
             kvstore=self.kvstore, preempt=self.preempt, evict=self.evict,
+            admission=self.admission, prefetch=self.prefetch,
             **kw)
 
     def run(self, requests: List[Request], trace=None) -> ServingReport:
@@ -156,13 +177,18 @@ class SimServingEngine:
                                  r.prefix_len * self.cfg.kv_bytes_per_token(),
                                  tier=self.kv_tier)
         res = self._make_core().run(engine_reqs, trace=trace)
-        ttfts, restore_secs, e2e, tpots, total = _fill_lifecycle(requests, res)
+        ttfts, restore_secs, e2e, tpots, total, arrivals, finishes = \
+            _fill_lifecycle(requests, res)
         return ServingReport(self.system, ttfts, restore_secs,
                              res.compute_busy, res.io_busy,
                              e2e=e2e, tpots=tpots, decode_busy=res.decode_busy,
                              preemptions=dict(res.preemptions),
-                             stats=lifecycle_stats(ttfts, e2e, tpots, total,
-                                                   res.makespan))
+                             arrivals=arrivals, finishes=finishes,
+                             overlap_decode_restore=res.overlap_decode_restore,
+                             stats=lifecycle_stats(
+                                 ttfts, e2e, tpots, total, res.makespan,
+                                 arrivals=arrivals, finishes=finishes,
+                                 offered=len(requests)))
 
 
 # ---------------------------------------------------------------------------
@@ -175,7 +201,8 @@ class RealServingEngine:
                  stages: int = 1, chunk_size: int = 16, l_delta: int = 64,
                  seed: int = 0, io_channels: int = 1, max_batch: int = 0,
                  kvstore: Optional[TieredKVStore] = None,
-                 preempt: str = "none", evict: bool = False):
+                 preempt: str = "none", evict: bool = False,
+                 admission: str = "continuous", prefetch: bool = False):
         self.model = model
         self.params = params
         self.system = system
@@ -187,6 +214,8 @@ class RealServingEngine:
         self.kvstore = kvstore
         self.preempt = preempt
         self.evict = evict
+        self.admission = admission
+        self.prefetch = prefetch
         # a MATERIALIZED store (repro.storage.ChunkStore) plugs in as both
         # the engine-core kvstore (residency/bandwidth/dedup-hit protocol)
         # and the executor's byte source: load ops then move real chunk
@@ -281,11 +310,13 @@ class RealServingEngine:
                           io_channels=self.io_channels,
                           max_active=self.max_batch, kvstore=self.kvstore,
                           preempt=self.preempt, evict=self.evict,
+                          admission=self.admission, prefetch=self.prefetch,
                           strict=True)
         t0 = time.perf_counter()
         res = core.run(engine_reqs, trace=trace)
         serve_wall = time.perf_counter() - t0
-        ttfts, restore_secs, e2e, tpots, total = _fill_lifecycle(requests, res)
+        ttfts, restore_secs, e2e, tpots, total, arrivals, finishes = \
+            _fill_lifecycle(requests, res)
         for r in requests:
             if r.new_len > 0:
                 out = self.executor.outputs(r.request_id)
@@ -294,6 +325,10 @@ class RealServingEngine:
                              res.compute_busy, res.io_busy,
                              e2e=e2e, tpots=tpots, decode_busy=res.decode_busy,
                              preemptions=dict(res.preemptions),
-                             stats=lifecycle_stats(ttfts, e2e, tpots, total,
-                                                   res.makespan)
+                             arrivals=arrivals, finishes=finishes,
+                             overlap_decode_restore=res.overlap_decode_restore,
+                             stats=lifecycle_stats(
+                                 ttfts, e2e, tpots, total, res.makespan,
+                                 arrivals=arrivals, finishes=finishes,
+                                 offered=len(requests))
                              | {"serve_wall": serve_wall})

@@ -31,11 +31,24 @@ def lifecycle_stats(ttfts: Dict[str, float],
                     e2e: Optional[Dict[str, float]] = None,
                     tpots: Optional[Dict[str, float]] = None,
                     total_tokens: int = 0,
-                    makespan: float = 0.0) -> Dict[str, float]:
+                    makespan: float = 0.0, *,
+                    arrivals: Optional[Dict[str, float]] = None,
+                    finishes: Optional[Dict[str, float]] = None,
+                    offered: int = 0) -> Dict[str, float]:
     """Whole-lifecycle serving summary: the classic TTFT percentiles plus
     end-to-end request latency, per-output-token time (TPOT — for a batched
     decode step this is also the time between tokens, TBT) and generation
-    throughput over the run."""
+    throughput over the run.
+
+    Stream-safe: all rates derive from PER-REQUEST finish events, never from
+    the engine's batch-close makespan.  Under continuous batching requests
+    retire mid-flight and the offered stream may outlive the measured
+    window, so ``makespan`` (which includes the drain tail of whatever
+    happened to still be in flight) systematically understates throughput.
+    When ``arrivals``/``finishes`` are given the denominator is the active
+    serving span — first arrival to last completed finish — and the summary
+    additionally reports ``completed``/``offered``/``requests_per_sec``.
+    ``makespan`` is only the fallback denominator for legacy callers."""
     out = percentiles(ttfts.values())
     if e2e:
         ep = percentiles(e2e.values())
@@ -45,6 +58,40 @@ def lifecycle_stats(ttfts: Dict[str, float],
         tp = percentiles(tpots.values())
         out["tpot_mean"] = tp["mean"]
         out["tpot_p99"] = tp["p99"]
-    if total_tokens and makespan > 0:
-        out["tokens_per_sec"] = total_tokens / makespan
+    span = makespan
+    if finishes:
+        t0 = min(arrivals.values()) if arrivals else 0.0
+        span = max(finishes.values()) - t0
+        out["completed"] = len(finishes)
+        out["offered"] = offered or (len(arrivals) if arrivals
+                                     else len(finishes))
+        if span > 0:
+            out["requests_per_sec"] = len(finishes) / span
+    if total_tokens and span > 0:
+        out["tokens_per_sec"] = total_tokens / span
     return out
+
+
+def sustained_throughput(arrivals: Dict[str, float],
+                         finishes: Dict[str, float],
+                         warmup: float = 0.0,
+                         drain: float = 0.0) -> Dict[str, float]:
+    """Steady-state completion rate over a trimmed measurement window.
+
+    Continuous-batching throughput is only meaningful at steady state: the
+    first requests see an empty device (warmup bias) and the last ones see
+    a draining queue (no fresh arrivals competing).  The window keeps
+    completions with ``warmup <= finish <= horizon - drain`` where the
+    horizon is the last arrival; the rate divides by the window length.
+    Returns ``{"window", "completed_in_window", "sustained_rps"}`` (zeros
+    when the window is empty or degenerate)."""
+    if not finishes:
+        return {"window": 0.0, "completed_in_window": 0, "sustained_rps": 0.0}
+    horizon = max(arrivals.values()) if arrivals else max(finishes.values())
+    lo, hi = warmup, horizon - drain
+    if hi <= lo:
+        lo, hi = 0.0, max(finishes.values())
+    done = sum(1 for t in finishes.values() if lo <= t <= hi)
+    window = hi - lo
+    return {"window": window, "completed_in_window": done,
+            "sustained_rps": done / window if window > 0 else 0.0}

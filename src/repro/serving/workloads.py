@@ -19,17 +19,27 @@ interactive requests (priority 1, tight first-token deadlines) arriving
 together — under a ``max_active`` cap the urgent burst queues behind long
 restorations unless the engine preempts.
 
+``multi_tenant`` is the CONTINUOUS-BATCHING workload (DESIGN.md §11): a
+sustained production-shaped stream mixing Zipf prefix popularity (a small
+catalog of shared contexts absorbs most traffic, so the KV store's reuse
+tiers matter), a diurnal arrival-rate envelope (the steady state the
+benchmark measures sits between the ramp-up and the trough) and three SLO
+classes (interactive / standard / batch) with distinct priorities and
+first-token deadlines.
+
 Deterministic in the seed; arrivals are Poisson.
 """
 from __future__ import annotations
 
+import math
 from typing import List
 
 import numpy as np
 
 from repro.serving.request import Request
 
-WORKLOADS = ("lmsys_chat", "wildchat", "swe_bench", "bursty_priority")
+WORKLOADS = ("lmsys_chat", "wildchat", "swe_bench", "bursty_priority",
+             "multi_tenant")
 
 
 def generate(workload: str, n_requests: int, *, seed: int = 0,
@@ -37,6 +47,9 @@ def generate(workload: str, n_requests: int, *, seed: int = 0,
     if workload == "bursty_priority":
         return bursty_priority(n_requests, seed=seed,
                                arrival_rate=arrival_rate, max_len=max_len)
+    if workload == "multi_tenant":
+        return multi_tenant(n_requests, seed=seed,
+                            arrival_rate=arrival_rate, max_len=max_len)
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, n_requests))
     reqs: List[Request] = []
@@ -108,6 +121,81 @@ def bursty_priority(n_requests: int, *, seed: int = 0,
                 priority=1, deadline=float(t) + urgent_deadline,
                 prefix_id=f"hi-{i}"))
     reqs.sort(key=lambda r: (r.arrival, r.request_id))
+    return reqs
+
+
+def multi_tenant(n_requests: int, *, seed: int = 0, arrival_rate: float = 2.0,
+                 max_len: int = 32_768, n_prefixes: int = 0,
+                 zipf_s: float = 1.1, diurnal_period: float = 60.0,
+                 diurnal_depth: float = 0.6) -> List[Request]:
+    """Sustained multi-tenant stream for continuous-batching studies.
+
+    Three production-shaped dimensions:
+
+      * **Zipf prefix popularity** — requests draw their shared context
+        from a catalog of ``n_prefixes`` prefixes (default ``≈ n/4``) with
+        Zipf(``zipf_s``) popularity: the head prefixes recur constantly
+        (hot in the KV store after first restoration; prefetch and reuse
+        tiers pay off), the tail is effectively cold.  Each catalog entry
+        has a FIXED length (lognormal, median ≈ 4k) so repeat hits are
+        true reuse.
+      * **Diurnal arrival envelope** — a thinned Poisson process whose
+        instantaneous rate follows ``rate·(1 - depth·(1+cos(2πt/T))/2)``:
+        peaks at ``arrival_rate``, troughs at ``rate·(1-depth)``.  The
+        steady-state window the throughput benchmark measures excludes the
+        empty-device ramp; the trough/peak alternation keeps admission
+        pressure time-varying the way real traffic is.
+      * **Mixed SLO classes** — ~30% interactive (priority 2, first-token
+        deadline arrival+2s, short turns), ~50% standard (priority 1,
+        +10s), ~20% batch (priority 0, no deadline, long decode) — the mix
+        the priority-aware I/O dispatch key orders a congested channel by.
+
+    Deterministic in the seed (thinning uses its own substream).
+    """
+    rng = np.random.default_rng(seed)
+    n_prefixes = n_prefixes or max(4, n_requests // 4)
+    # fixed-length catalog: popularity rank ~ Zipf, length iid lognormal
+    catalog_len = np.minimum(
+        rng.lognormal(np.log(4000), 0.8, n_prefixes), max_len)
+    catalog_len = np.maximum(catalog_len, 256).astype(np.int64)
+    ranks = np.arange(1, n_prefixes + 1, dtype=np.float64)
+    popularity = ranks ** (-zipf_s)
+    popularity /= popularity.sum()
+
+    # diurnal thinned Poisson: simulate at the PEAK rate, keep each arrival
+    # with probability rate(t)/peak (Lewis–Shedler thinning)
+    arrivals: List[float] = []
+    t = 0.0
+    while len(arrivals) < n_requests:
+        t += rng.exponential(1.0 / arrival_rate)
+        envelope = 1.0 - diurnal_depth * (
+            1.0 + math.cos(2.0 * math.pi * t / diurnal_period)) / 2.0
+        if rng.random() < envelope:
+            arrivals.append(t)
+
+    reqs: List[Request] = []
+    classes = rng.choice(3, n_requests, p=[0.3, 0.5, 0.2])
+    prefix_ids = rng.choice(n_prefixes, n_requests, p=popularity)
+    for i in range(n_requests):
+        pid = int(prefix_ids[i])
+        a = arrivals[i]
+        if classes[i] == 0:        # interactive
+            prio, deadline = 2, a + 2.0
+            new = int(rng.integers(16, 128))
+            dec = int(rng.integers(8, 64))
+        elif classes[i] == 1:      # standard
+            prio, deadline = 1, a + 10.0
+            new = int(rng.integers(32, 512))
+            dec = int(rng.integers(16, 128))
+        else:                      # batch
+            prio, deadline = 0, math.inf
+            new = int(rng.integers(64, 1024))
+            dec = int(rng.integers(64, 256))
+        reqs.append(Request(
+            request_id=f"mt-{i}", arrival=float(a),
+            prefix_len=int(catalog_len[pid]), new_len=new, decode_len=dec,
+            priority=prio, deadline=float(deadline),
+            prefix_id=f"prefix-{pid}"))
     return reqs
 
 

@@ -277,7 +277,7 @@ def test_trace_v3_preemption_round_trip_and_replay():
     core = EngineCore(SimBackend(cost), stages=1, io_channels=1,
                       max_active=2, preempt="priority", strict=True)
     res, trace = capture(core, _burst(cfg))
-    assert trace.version == TRACE_VERSION == 4
+    assert trace.version == TRACE_VERSION == 5
     assert trace.preempts() and trace.resumes()
     assert trace.meta["preempt"] == "priority"
     assert replay_trace(trace) == res            # bit-identical, incl. aborts
@@ -290,12 +290,19 @@ def test_trace_v3_preemption_round_trip_and_replay():
 def test_trace_v2_loads_by_upgrade():
     """A pre-preemption (v2) trace — no priorities, no preempt meta, no
     preemptions in the result — loads cleanly and replays bit-identically
-    under the implicit preempt="none" upgrade."""
+    under the implicit preempt="none" upgrade.  The capture uses
+    priority-free requests: a real v2 engine had no SLO classes, so its
+    schedule could not depend on them (since v5 the default I/O dispatch
+    key IS priority-aware, so a priority-bearing capture would not survive
+    having the field stripped)."""
     cost = _cost()
     cfg = cost.cfg
     core = EngineCore(SimBackend(cost), stages=1, io_channels=1,
                       max_active=2, strict=True)
-    res, trace = capture(core, _burst(cfg))
+    reqs = _burst(cfg)
+    for r in reqs:
+        r.priority = 0
+    res, trace = capture(core, reqs)
     d = trace.to_dict()
     d["version"] = 2
     del d["meta"]["preempt"]
