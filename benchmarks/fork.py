@@ -1,0 +1,177 @@
+"""Session forking on the paged-block KV cache: O(1) branch restoration.
+
+Real-mode (reduced model, on-host): a parent request is served through the
+materialized ``ChunkStore``, leaving its prefix resident as refcounted
+device blocks in the shared ``BlockPool``.  K branch requests carrying
+``meta={"fork_of": parent}`` then fork the session — block tables alias
+the parent's physical blocks (refcount bumps, zero bytes) and each branch
+reaches its first token with ~zero restoration traffic.  The baseline is
+a full re-restore: the same branch after every parent chunk was demoted
+off-device, which must move the whole prefix back over the interconnect.
+
+Also pinned here, as acceptance criteria:
+
+  * copy-on-write is O(1) per fork — a branch appending into a shared
+    (non-block-aligned) tail block copies exactly ONE block, independent
+    of prefix length;
+  * partial eviction is block-granular — demoting HALF the parent's
+    chunks and re-serving a branch transfers EXACTLY the demoted bytes,
+    not the whole prefix from token 0.
+
+CLI: ``python benchmarks/fork.py [--smoke]``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import row  # noqa: E402
+
+_MODEL = {}
+
+_CHUNK = 8
+
+
+def _model():
+    if not _MODEL:
+        import jax
+        from repro.configs import get_config
+        from repro.models import build_model
+        cfg = get_config("qwen3-8b").reduced()
+        m = build_model(cfg)
+        _MODEL.update(cfg=cfg, model=m, params=m.init(jax.random.PRNGKey(0)))
+    return _MODEL
+
+
+def _engine():
+    from repro.serving import ChunkStore, RealServingEngine
+    mm = _model()
+    store = ChunkStore(chunk_size=_CHUNK, quant="none", default_tier="host")
+    # the load-only baseline makes restoration pure I/O, so every byte on
+    # the wire is a restoration transfer and the fork-vs-rerestore byte
+    # accounting below is exact (cacheflow's two-pointer race lets compute
+    # claim chunks dynamically — WHICH chunks load becomes schedule-
+    # dependent, the wrong substrate for byte assertions)
+    eng = RealServingEngine(mm["model"], mm["params"], system="lmcache",
+                            stages=2, chunk_size=_CHUNK, kvstore=store)
+    return eng, store
+
+
+def _branch(i, prefix_len, *, decode_len):
+    from repro.serving import Request
+    return Request(f"b{i}", 0.05 * i, prefix_len, 8, decode_len=decode_len,
+                   meta={"fork_of": "parent"})
+
+
+def _fork_tree(prefix_len: int, branches: int, *, decode_len=2):
+    """Serve parent, fork K branches, then measure the three regimes:
+    resident fork, half-demoted (partial) refetch, full re-restore."""
+    from repro.serving import Request
+    eng, store = _engine()
+
+    eng.serve([Request("parent", 0.0, prefix_len, 8, decode_len=decode_len)],
+              verify=True)
+    parent_bytes = store.bytes_transferred
+    cow0 = store.pool.bytes_copied
+
+    # K forked branches against the fully-resident parent: zero transfers
+    b0 = store.bytes_transferred
+    rep = eng.serve([_branch(i, prefix_len, decode_len=decode_len)
+                     for i in range(branches)], verify=True)
+    fork_bytes = store.bytes_transferred - b0
+    fork_ttft = float(np.mean(list(rep.ttfts.values())))
+    cow_per_branch = (store.pool.bytes_copied - cow0) / branches
+    store.audit()
+
+    # partial eviction: demote HALF the chunks, one more branch — the
+    # refetch must move exactly the demoted bytes (block granularity)
+    keys = store.requests["parent"]
+    demoted = 0
+    for k in keys[len(keys) // 2:]:
+        store.core.put(k, "host")
+        demoted += store._size(k, "host")
+    b1 = store.bytes_transferred
+    eng.serve([_branch(branches, prefix_len, decode_len=decode_len)],
+              verify=True)
+    partial_bytes = store.bytes_transferred - b1
+    store.audit()
+
+    # full re-restore baseline: every chunk demoted, whole prefix on the wire
+    for k in keys:
+        store.core.put(k, "host")
+    b2 = store.bytes_transferred
+    rep = eng.serve([_branch(branches + 1, prefix_len, decode_len=decode_len)],
+                    verify=True)
+    full_bytes = store.bytes_transferred - b2
+    full_ttft = float(np.mean(list(rep.ttfts.values())))
+    store.audit()
+
+    return dict(parent_bytes=parent_bytes, fork_bytes=fork_bytes,
+                fork_ttft=fork_ttft, cow_per_branch=cow_per_branch,
+                demoted=demoted, partial_bytes=partial_bytes,
+                full_bytes=full_bytes, full_ttft=full_ttft,
+                forks=store.forks, block_nbytes=store.pool.block_nbytes)
+
+
+def run(smoke: bool = False):
+    rows = []
+    # non-block-aligned prefixes so every branch's append lands in a SHARED
+    # tail block and exercises copy-on-write (aligned appends open a fresh
+    # block — legal, but then there is nothing to copy)
+    prefixes = (36,) if smoke else (36, 68)
+    branches = 2 if smoke else 3
+    per_prefix = []
+    for pl in prefixes:
+        m = _fork_tree(pl, branches)
+        per_prefix.append(m)
+        rows.append(row(
+            f"fork/real/prefix={pl}/fork", m["fork_ttft"],
+            f"bytes={m['fork_bytes']} vs_full={m['full_bytes']} "
+            f"cow_bytes_per_branch={m['cow_per_branch']:.0f} "
+            f"forks={m['forks']}"))
+        rows.append(row(
+            f"fork/real/prefix={pl}/full_rerestore", m["full_ttft"],
+            f"bytes={m['full_bytes']} "
+            f"fork_vs_full={m['fork_bytes'] / max(1, m['full_bytes']):.3f}x"))
+        rows.append(row(
+            f"fork/real/prefix={pl}/partial_evict", 0.0,
+            f"bytes={m['partial_bytes']} demoted={m['demoted']} "
+            f"full={m['full_bytes']}"))
+        # forked branches reach first token with ~zero restoration bytes
+        assert m["fork_bytes"] <= 0.05 * m["full_bytes"], \
+            (m["fork_bytes"], m["full_bytes"], "fork was not ~zero-transfer")
+        # block-granular partial eviction: exactly the missing bytes move
+        assert m["partial_bytes"] == m["demoted"], \
+            (m["partial_bytes"], m["demoted"])
+        assert m["partial_bytes"] < m["full_bytes"], \
+            (m["partial_bytes"], m["full_bytes"])
+        # CoW per branch is bounded by one physical block
+        assert 0 < m["cow_per_branch"] <= m["block_nbytes"], \
+            (m["cow_per_branch"], m["block_nbytes"])
+    if len(per_prefix) > 1:
+        # O(1) claim: copied bytes per fork do NOT grow with prefix length
+        a, b = per_prefix[0], per_prefix[-1]
+        assert a["cow_per_branch"] == b["cow_per_branch"], \
+            (a["cow_per_branch"], b["cow_per_branch"],
+             "CoW bytes grew with prefix length")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run for CI (1 prefix length, 2 branches)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for line in run(smoke=args.smoke):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

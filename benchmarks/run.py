@@ -21,6 +21,7 @@ MODULES = [
     "benchmarks.fig9_hardware",
     "benchmarks.fig10_batch",
     "benchmarks.fig11_storage",
+    "benchmarks.fork",
     "benchmarks.preemption",
     "benchmarks.throughput",
     "benchmarks.roofline",

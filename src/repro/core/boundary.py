@@ -12,7 +12,7 @@ of boundary activations along the *token* axis (DESIGN.md §5).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -68,6 +68,15 @@ class BoundaryStore:
         total = _nbytes(req.kv_reference)
         t0, t1 = tokens
         return int(total * (t1 - t0) / max(1, req.n_tokens) * layer_frac)
+
+    def fork(self, src_rid: str, dst_rid: str) -> StoredRequest:
+        """Alias ``src``'s stored request under ``dst`` — the fork shares
+        every array (inputs, KV reference, boundaries, snapshots) and
+        writes ZERO bytes; only the id differs."""
+        req = self._store[src_rid]
+        clone = replace(req, request_id=dst_rid)
+        self._store[dst_rid] = clone
+        return clone
 
     def __contains__(self, rid: str) -> bool:
         return rid in self._store

@@ -180,6 +180,14 @@ class EngineBackend:
         charges nothing."""
         return 0.0
 
+    def io_secs_partial(self, op: ScheduledOp, req: EngineRequest,
+                        bandwidth: Optional[float], missing: float) -> float:
+        """Duration of a load only ``missing`` (0..1, bytes-weighted) of
+        whose blocks actually cross the interconnect — block-granular
+        residency: a partially evicted unit re-transfers just its missing
+        blocks.  Default prices the transfer pro rata."""
+        return self.io_secs(op, req, bandwidth) * missing
+
     def prefill_secs(self, op: ScheduledOp, req: EngineRequest) -> float:
         """Duration of one suffix-prefill stage op (kind == "prefill")."""
         raise NotImplementedError
@@ -394,6 +402,13 @@ class RealBackend(EngineBackend):
         self.executor.execute_op(op)
         return 0.0
 
+    def io_secs_partial(self, op: ScheduledOp, req: EngineRequest,
+                        bandwidth: Optional[float], missing: float) -> float:
+        # the measured wall time already reflects only the missing blocks
+        # moving (resident blocks fetch as device-local hits inside the
+        # store) — no pro-rata scaling on top
+        return self.io_secs(op, req, bandwidth)
+
     def prefetch_secs(self, op: ScheduledOp, req: EngineRequest,
                       bandwidth: Optional[float]) -> float:
         # the byte movement happens at completion (the engine promotes the
@@ -544,6 +559,15 @@ class EngineCore:
         ks = self.kvstore
         return (ks is not None and hasattr(ks, "io_resident")
                 and ks.io_resident(rid, tokens, layers))
+
+    def _missing_fraction(self, rid: str, tokens, layers) -> float:
+        """Block-granular residency: the bytes-weighted fraction of the
+        unit NOT on device.  Stores without block granularity (the sim
+        store's whole-request placement) transfer the full unit."""
+        ks = self.kvstore
+        if ks is None or not hasattr(ks, "missing_fraction"):
+            return 1.0
+        return max(0.0, min(1.0, ks.missing_fraction(rid, tokens, layers)))
 
     # ------------------------------------------------------------------
     def run(self, requests: List[EngineRequest],
@@ -742,7 +766,12 @@ class EngineCore:
                             self.kvstore.note_io_hit(op.request_id,
                                                      op.tokens, op.layers)
                     else:
-                        dur = self.backend.io_secs(op, r, bw) \
+                        # block-granular pricing: only the unit's missing
+                        # blocks ride the interconnect (partial eviction
+                        # does not re-transfer the resident remainder)
+                        frac = self._missing_fraction(op.request_id,
+                                                      op.tokens, op.layers)
+                        dur = self.backend.io_secs_partial(op, r, bw, frac) \
                             * self.slow.get(c, 1.0)
                     restore_start.setdefault(op.request_id, now)
                     io_free[c] = False

@@ -24,7 +24,8 @@ import numpy as np
 from repro.core.boundary import BoundaryStore, StoredRequest, stage_bounds
 from repro.core.plans import RequestPlan, make_request_plans
 from repro.core.scheduler import ScheduledOp
-from repro.models.kvcache import grow_cache, park_cache, unpark_cache
+from repro.models.kvcache import (PagedKVCache, grow_cache, park_cache,
+                                  unpark_cache)
 from repro.models.model import Model
 
 ATTN_FIELDS = ("k", "v", "ckv")
@@ -42,12 +43,15 @@ class RestorationExecutor:
         # materialized chunk-granular KV store (repro.storage.ChunkStore):
         # load ops read REAL chunk bytes out of its tiers instead of the
         # boundary store's ground-truth payload.  Requires linear (non-ring)
-        # attention caches; one store serves one chunk granularity.
+        # attention caches; store blocks must tile the executor's I/O unit
+        # (block size divides chunk_size), so residency — and partial
+        # re-restoration after eviction — is BLOCK-granular even when the
+        # restoration plan moves coarser units.
         if chunk_store is not None:
-            if chunk_store.chunk_size != chunk_size:
+            if chunk_size % chunk_store.chunk_size != 0:
                 raise ValueError(
-                    f"chunk_store granularity {chunk_store.chunk_size} != "
-                    f"executor chunk_size {chunk_size}")
+                    f"chunk_store block size {chunk_store.chunk_size} must "
+                    f"divide executor chunk_size {chunk_size}")
             if model.cfg.attn_window:
                 raise ValueError("chunk store does not support ring-buffer "
                                  "(windowed) caches; token->slot is modular")
@@ -57,6 +61,8 @@ class RestorationExecutor:
         # lifecycle inputs registered before the engine runs:
         # rid -> (suffix inputs | None, decode_len)
         self._suffix: Dict[str, Tuple[object, int]] = {}
+        # child rid -> parent rid for O(1) session forks (fork())
+        self._forks: Dict[str, str] = {}
 
     # ------------------------------------------------------------------
     # Previous turn: full (chunked) prefill; persist KV + boundaries + states
@@ -97,6 +103,20 @@ class RestorationExecutor:
             self.chunk_store.put_request(rid, inputs, cache)
         return req
 
+    def fork(self, parent_rid: str, child_rid: str) -> StoredRequest:
+        """O(1) fork of a stored (possibly live) session: the child aliases
+        the parent's stored prefix — inputs/KV reference/boundaries are
+        SHARED arrays, the chunk chain forks by refcount bumps, and on
+        device the child's block table will alias the parent's physical
+        blocks (copy-on-write) when restoration begins.  No prefill runs
+        and no KV bytes are copied; contrast with :meth:`remember`, which
+        recomputes the whole prefix."""
+        child = self.store.fork(parent_rid, child_rid)
+        if self.chunk_store is not None:
+            self.chunk_store.fork_request(parent_rid, child_rid)
+        self._forks[child_rid] = parent_rid
+        return child
+
     # ------------------------------------------------------------------
     # Restoration
     # ------------------------------------------------------------------
@@ -107,10 +127,54 @@ class RestorationExecutor:
         self._live[rid] = {"cache": cache, "act": {}, "req": req}
         if plans is not None:
             self._live[rid]["plans"] = {p.stage: p for p in plans}
+        if self.chunk_store is not None and "kpos" in cache:
+            parent = self._forks.get(rid)
+            p_live = self._live.get(parent) if parent is not None else None
+            if p_live is not None and "paged" in p_live:
+                # fork of a LIVE session: the child's block table clones the
+                # parent's — O(1) copied bytes, CoW from here on.  Only the
+                # stored prefix is inherited (not the parent's decoded tail).
+                paged = p_live["paged"].clone()
+                paged.truncate(req.n_tokens)
+            else:
+                paged = PagedKVCache(self.chunk_store.pool, req.n_tokens)
+            self._live[rid]["paged"] = paged
+            self._sync_paged(rid)
+
+    def _sync_paged(self, rid: str):
+        """Alias every already-HBM-resident store block into the request's
+        block table (no bytes move) — the table then answers residency at
+        block granularity."""
+        live = self._live[rid]
+        paged: PagedKVCache = live["paged"]
+        n_blocks = paged._nblocks(live["req"].n_tokens)
+        for ci, key in enumerate(self.chunk_store.requests.get(rid, ())):
+            if ci >= n_blocks:
+                break
+            bid = self.chunk_store.block_of(key)
+            if bid is not None and not paged.has_block(ci):
+                paged.map_block(ci, bid)
+
+    def _paged_write(self, live: dict, t0: int, t1: int):
+        """Write tokens [t0, t1) of the live contiguous cache through the
+        request's block table (CoW: blocks shared with a forked session are
+        copied before mutation)."""
+        paged = live.get("paged")
+        if paged is None:
+            return
+        cache = live["cache"]
+        fields = {f: cache[f][:, :, t0:t1] for f in ATTN_FIELDS if f in cache}
+        fields["kpos"] = cache["kpos"][:, t0:t1]
+        paged.write_span(t0, t1, fields)
 
     def live_cache(self, rid: str):
         """The in-flight (or final) restored cache of a live restoration."""
         return self._live[rid]["cache"]
+
+    def paged_cache(self, rid: str) -> Optional[PagedKVCache]:
+        """The request's block-table view (None without a chunk store)."""
+        live = self._live.get(rid)
+        return live.get("paged") if live else None
 
     def make_plans(self, rid: str, *, l_delta: int, strategy: Optional[str] = None
                    ) -> List[RequestPlan]:
@@ -211,6 +275,8 @@ class RestorationExecutor:
         chunks = None
         if self.chunk_store is not None and "kpos" in cache:
             chunks = self.chunk_store.fetch_range(op.request_id, t0, t1)
+            if chunks is not None:
+                self._map_loaded_blocks(op.request_id, t0, t1)
         for i in range(lo, hi):
             kind, slot = slots[i]
             if kind == "attention":
@@ -246,6 +312,20 @@ class RestorationExecutor:
                             cache[f] = cache[f].at[slot].set(arr[slot])
         live["cache"] = cache
 
+    def _map_loaded_blocks(self, rid: str, t0: int, t1: int):
+        """After a load fetched tokens [t0, t1), alias the now-HBM-resident
+        store blocks into the request's block table."""
+        live = self._live[rid]
+        paged = live.get("paged")
+        if paged is None:
+            return
+        keys = self.chunk_store.requests.get(rid, ())
+        cs = self.chunk_store.chunk_size
+        for ci in range(t0 // cs, min(len(keys), -(-t1 // cs))):
+            bid = self.chunk_store.block_of(keys[ci])
+            if bid is not None and not paged.has_block(ci):
+                paged.map_block(ci, bid)
+
     # -- suffix prefill (one op per pipeline stage, in stage order) --------
     def _exec_prefill(self, op: ScheduledOp):
         m = self.model
@@ -272,6 +352,10 @@ class RestorationExecutor:
             live["tokens_out"] = [int(jnp.argmax(logits[0]))]
             live["step_logits"] = []
             live["pos"] = t1
+            # every layer's suffix KV is now in the contiguous cache:
+            # append it through the block table (CoW against forks)
+            if "kpos" in live["cache"]:
+                self._paged_write(live, t0, t1)
 
     # -- batched decode (one token per request per step) -------------------
     def decode_step_batch(self, rids: List[str]):
@@ -302,6 +386,10 @@ class RestorationExecutor:
                                           live["pos"])
             live["cache"] = cache
             live["last_logits"] = logits
+            if "kpos" in cache:
+                # append the new token's KV through the block table: a tail
+                # block shared with a forked sibling copies here (CoW)
+                self._paged_write(live, live["pos"], live["pos"] + 1)
             live["pos"] += 1
             live["tokens_out"].append(int(jnp.argmax(logits[0])))
             live["step_logits"].append(logits)
@@ -358,8 +446,22 @@ class RestorationExecutor:
         """Eviction-mode preemption: the partially-restored cache (and its
         boundary activations) are DROPPED — nothing is parked, host memory
         is freed immediately.  Restoration restarts from the KV store via a
-        fresh :meth:`begin_restore` when the request is re-admitted."""
-        self._live.pop(rid, None)
+        fresh :meth:`begin_restore` when the request is re-admitted.  The
+        block table releases its refs, but blocks the STORE still holds
+        stay HBM-resident — re-restoration re-fetches only the blocks the
+        store actually demoted in the meantime, not the whole prefix."""
+        live = self._live.pop(rid, None)
+        if live is not None and "paged" in live:
+            live["paged"].free()
+
+    def release(self, rid: str):
+        """Retire a finished request: free its live state (block-table refs
+        included) and drop its store references.  Store-held blocks remain
+        for prefix reuse; chunks at refcount 0 become eviction candidates."""
+        self.drop_restore(rid)
+        self._forks.pop(rid, None)
+        if self.chunk_store is not None:
+            self.chunk_store.free_request(rid)
 
     def is_live(self, rid: str) -> bool:
         return rid in self._live

@@ -461,6 +461,12 @@ class ReplayBackend(EngineBackend):
                 bandwidth: Optional[float]) -> float:
         return self._pop_dispatch(op)
 
+    def io_secs_partial(self, op: ScheduledOp, req: EngineRequest,
+                        bandwidth: Optional[float], missing: float) -> float:
+        # recorded durations already priced the missing fraction at capture
+        # time — replay pins them verbatim, no re-scaling
+        return self._pop_dispatch(op)
+
     def prefill_secs(self, op: ScheduledOp, req: EngineRequest) -> float:
         return self._pop_dispatch(op)
 

@@ -269,7 +269,11 @@ def main():
                 "bytes_transferred": store.bytes_transferred,
                 "io_hits": store.io_hits,
                 "skipped_transfers": store.skipped_transfers,
-                "store_misses": store.store_misses}
+                "store_misses": store.store_misses,
+                "forks": store.forks,
+                "pool_blocks": store.pool.live_blocks(),
+                "cow_copies": store.pool.cow_copies,
+                "cow_bytes": store.pool.bytes_copied}
         print(json.dumps(out, indent=1))
         return
 

@@ -2,5 +2,6 @@ from repro.serving.engine import RealServingEngine, ServingReport, SimServingEng
 from repro.serving.kvstore import TieredKVStore  # noqa: F401
 from repro.storage import ChunkStore  # noqa: F401
 from repro.serving.request import Phase, Request  # noqa: F401
-from repro.serving.workloads import (WORKLOADS, bursty_priority,  # noqa: F401
-                                     fixed_length, generate)
+from repro.serving.workloads import (WORKLOADS, agentic_tree,  # noqa: F401
+                                     bursty_priority, fixed_length, generate,
+                                     multi_tenant)

@@ -243,6 +243,14 @@ class RealServingEngine:
             self.kvstore.put(r.request_id,
                              r.prefix_len * self.model.cfg.kv_bytes_per_token())
 
+    def fork(self, parent_rid: str, child_rid: str):
+        """O(1) session fork: the child aliases the parent's stored prefix
+        (shared arrays + chunk-chain refcount bumps + CoW block tables on
+        device) instead of re-running prefill — how an agentic tree search
+        speculates K branches off one live context.  Requests carrying
+        ``meta={"fork_of": parent_id}`` take this path in :meth:`serve`."""
+        return self.executor.fork(parent_rid, child_rid)
+
     def _make_plans(self, r: Request, bounds):
         cfg = self.model.cfg
         strategy = "layer" if cfg.rwkv is not None else None
@@ -284,7 +292,16 @@ class RealServingEngine:
         engine_reqs = []
         for r in requests:
             if r.request_id not in self.executor.store:
-                self.remember(r)
+                parent = r.meta.get("fork_of") if r.meta else None
+                if parent is not None and parent in self.executor.store:
+                    if self.executor.store.get(parent).n_tokens != r.prefix_len:
+                        raise ValueError(
+                            f"fork {r.request_id}: prefix_len {r.prefix_len} "
+                            f"!= parent {parent} stored length "
+                            f"{self.executor.store.get(parent).n_tokens}")
+                    self.fork(parent, r.request_id)
+                else:
+                    self.remember(r)
             r.phase = Phase.RESTORING
             if r.new_len > 0 or r.decode_len > 0:
                 suffix = self._inputs(r.new_len) if r.new_len > 0 else None

@@ -27,6 +27,14 @@ benchmark measures sits between the ramp-up and the trough) and three SLO
 classes (interactive / standard / batch) with distinct priorities and
 first-token deadlines.
 
+``agentic_tree`` is the SESSION-FORKING workload (DESIGN.md §12): tree
+search over actions — each tree has one PARENT request carrying a long
+agent context, then K speculative BRANCHES forked from the live parent
+(``meta["fork_of"]``) moments later, each trying a different short action
+suffix.  Branches share the parent's entire prefix: with paged-block CoW
+they reach first token with ~zero restoration bytes (the fork aliases the
+parent's device blocks) instead of re-restoring the full context K times.
+
 Deterministic in the seed; arrivals are Poisson.
 """
 from __future__ import annotations
@@ -39,7 +47,7 @@ import numpy as np
 from repro.serving.request import Request
 
 WORKLOADS = ("lmsys_chat", "wildchat", "swe_bench", "bursty_priority",
-             "multi_tenant")
+             "multi_tenant", "agentic_tree")
 
 
 def generate(workload: str, n_requests: int, *, seed: int = 0,
@@ -49,6 +57,9 @@ def generate(workload: str, n_requests: int, *, seed: int = 0,
                                arrival_rate=arrival_rate, max_len=max_len)
     if workload == "multi_tenant":
         return multi_tenant(n_requests, seed=seed,
+                            arrival_rate=arrival_rate, max_len=max_len)
+    if workload == "agentic_tree":
+        return agentic_tree(n_requests, seed=seed,
                             arrival_rate=arrival_rate, max_len=max_len)
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, n_requests))
@@ -196,6 +207,54 @@ def multi_tenant(n_requests: int, *, seed: int = 0, arrival_rate: float = 2.0,
             prefix_len=int(catalog_len[pid]), new_len=new, decode_len=dec,
             priority=prio, deadline=float(deadline),
             prefix_id=f"prefix-{pid}"))
+    return reqs
+
+
+def agentic_tree(n_requests: int, *, seed: int = 0, arrival_rate: float = 2.0,
+                 max_len: int = 32_768, branch_factor: int = 4,
+                 think_gap: float = 0.25) -> List[Request]:
+    """Agentic tree-search workload: speculative branches forked off live
+    parent contexts.
+
+    Requests come in TREES of ``1 + branch_factor``: the parent carries a
+    long accumulated agent context (lognormal, median ≈ 6k — tool outputs,
+    scratchpads, retrieved docs) and starts decoding; ``think_gap`` seconds
+    later its K speculative branches arrive, each with the SAME prefix
+    length, ``meta={"fork_of": parent_id}`` and a short action suffix —
+    the serving engine forks them from the parent session (CoW block
+    tables) instead of re-running/re-restoring the shared context.  The
+    last tree may be partial so EXACTLY ``n_requests`` are returned; sim
+    engines (no fork path) still see maximal prefix sharing via the
+    tree-wide ``prefix_id``."""
+    rng = np.random.default_rng(seed)
+    tree = 1 + max(1, branch_factor)
+    n_trees = -(-n_requests // tree)
+    arrivals = np.cumsum(rng.exponential(tree / arrival_rate, n_trees))
+    prefix = np.minimum(rng.lognormal(np.log(6000), 0.7, n_trees), max_len)
+    reqs: List[Request] = []
+    for t in range(n_trees):
+        parent_id = f"tree{t}-root"
+        plen = int(max(256, prefix[t]))
+        reqs.append(Request(
+            request_id=parent_id, arrival=float(arrivals[t]),
+            prefix_len=plen, new_len=int(rng.integers(16, 128)),
+            decode_len=int(rng.integers(16, 64)),
+            prefix_id=f"tree-{t}"))
+        for j in range(max(1, branch_factor)):
+            if len(reqs) >= n_requests:
+                break
+            reqs.append(Request(
+                request_id=f"tree{t}-b{j}",
+                arrival=float(arrivals[t] + think_gap * (1 + j)
+                              + rng.exponential(0.05)),
+                prefix_len=plen, new_len=int(rng.integers(8, 64)),
+                decode_len=int(rng.integers(4, 32)),
+                prefix_id=f"tree-{t}",
+                meta={"fork_of": parent_id}))
+        if len(reqs) >= n_requests:
+            break
+    reqs = reqs[:n_requests]
+    reqs.sort(key=lambda r: (r.arrival, r.request_id))
     return reqs
 
 

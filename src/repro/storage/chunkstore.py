@@ -17,9 +17,14 @@ tiers of the CacheFlow restoration path).
 Tiers (placement/accounting shared with the sim store via
 :class:`~repro.storage.placement.PlacementCore`):
 
-  * ``hbm``  — device arrays (the restoration executor's load ops copy
-    straight out of this view; a chunk resident here costs NO transfer —
-    the engine core skips the I/O channel entirely, a *dedup hit*);
+  * ``hbm``  — a block in the shared device-side
+    :class:`~repro.models.kvcache.BlockPool` (``chunk_size`` tokens ==
+    one block): requests sharing a prefix alias the SAME physical block
+    on device, and the restoration executor's per-request
+    ``PagedKVCache`` tables map these blocks directly (the load ops copy
+    straight out of the pool view; a chunk resident here costs NO
+    transfer — the engine core skips the I/O channel entirely, a *dedup
+    hit*).  ``fork_request`` forks a whole chain O(1) by refcount bumps;
   * ``host`` — DRAM numpy buffers; with ``quant="int8"`` the chunk is
     stored per-channel int8-quantized (``kernels/kv_quant``), so demotion
     compresses and promotion dequantizes — transfers move ~half the bytes;
@@ -53,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.kv_quant import kv_dequantize, kv_quantize
+from repro.models.kvcache import BlockPool
 from repro.storage.placement import PlacementCore, Tier
 
 CHUNK_TIERS = ("hbm", "host", "disk")
@@ -120,11 +126,16 @@ class ChunkStore:
              Tier("disk", disk_bw, disk_cap)],
             size_fn=self._size, move_fn=self._move, drop_fn=self._drop,
             victim_fn=self._benefit if eviction == "benefit" else None)
+        # device-side block pool backing the hbm tier: one chunk == one
+        # block, so an hbm repr is a block id and every request table
+        # aliasing the chunk shares ONE physical copy (CoW on writes)
+        self.pool = BlockPool(chunk_size)
         self.chunks: Dict[str, _Chunk] = {}
         self.requests: Dict[str, List[str]] = {}   # rid -> chunk key chain
         # accounting (benchmarks/tests read these)
         self.dedup_hits = 0
         self.bytes_deduped = 0
+        self.forks = 0                   # O(1) session forks (fork_request)
         self.puts = 0
         self.fetches = 0                 # chunk transfers out of host/disk
         self.io_hits = 0                 # fetches served from the hbm view
@@ -156,7 +167,9 @@ class ChunkStore:
         c = self.chunks[key]
         if dst not in c.reprs:
             if dst == "hbm":
-                c.reprs["hbm"] = self._decode_device(key)
+                # the hbm repr is a pool BLOCK ID (the store holds one pool
+                # ref; request block tables aliasing the chunk hold more)
+                c.reprs["hbm"] = self.pool.alloc(self._decode_device(key))
             elif dst == "host":
                 c.reprs["host"] = self._encode_host(key)
             else:
@@ -178,6 +191,11 @@ class ChunkStore:
 
     def _del_repr_obj(self, c: _Chunk, tier: str):
         rep = c.reprs.pop(tier, None)
+        if tier == "hbm" and rep is not None:
+            # release the STORE's pool ref; the physical block outlives the
+            # hbm placement while any request block table still aliases it
+            # (demotion/eviction never invalidates a live table)
+            self.pool.decref(rep)
         if tier == "disk" and isinstance(rep, str) and os.path.exists(rep):
             os.remove(rep)
 
@@ -195,9 +213,11 @@ class ChunkStore:
         if "raw" in c.reprs:                 # staged put, not yet placed
             raw = c.reprs["raw"]
         else:
-            dev = c.reprs["hbm"]
-            raw = {f: np.asarray(dev[f]) for f in c.fields}
-            raw["kpos"] = np.asarray(dev["kpos"])
+            dev = self.pool.read(c.reprs["hbm"])
+            t0, t1 = c.tokens
+            n = t1 - t0                      # strip block padding (tail chunk)
+            raw = {f: np.asarray(dev[f][:, :, :n]) for f in c.fields}
+            raw["kpos"] = np.asarray(dev["kpos"][:, :n])
         return self._quantize(raw) if self.quant == "int8" else raw
 
     def _encode_host(self, key: str) -> dict:
@@ -325,6 +345,26 @@ class ChunkStore:
         self.requests[rid] = keys
         return keys
 
+    def fork_request(self, parent: str, child: str) -> List[str]:
+        """O(1) session fork: the child references the parent's exact
+        chunk chain — refcount bumps only, zero bytes staged, moved or
+        copied.  Counted as dedup hits (the bytes the fork did NOT copy
+        feed ``bytes_deduped``)."""
+        keys = self.requests[parent]
+        if child in self.requests:
+            self.free_request(child)
+        for key in keys:
+            c = self.chunks.get(key)
+            if c is None:
+                continue                 # dropped chunk: future store miss
+            c.refcount += 1
+            self.dedup_hits += 1
+            self.bytes_deduped += c.raw_nbytes
+            self.core.touch(key)
+        self.requests[child] = list(keys)
+        self.forks += 1
+        return list(keys)
+
     def free_request(self, rid: str):
         """Drop a request's reference to its chunks.  Chunks at refcount 0
         stay stored (prefix cache) but evict first (zero benefit)."""
@@ -335,6 +375,25 @@ class ChunkStore:
             if c.refcount <= 0:
                 raise AssertionError(f"negative refcount for chunk {key}")
             c.refcount -= 1
+
+    def block_of(self, key: str) -> Optional[int]:
+        """The pool block id backing an HBM-resident chunk (None when the
+        chunk sits below HBM) — what request block tables alias."""
+        c = self.chunks.get(key)
+        if c is None or self.core.tier_of(key) != "hbm":
+            return None
+        return c.reprs["hbm"]
+
+    def device_view(self, key: str) -> dict:
+        """The HBM-resident chunk's fields as device array views, trimmed
+        to the chunk's real token extent (tail blocks are zero-padded in
+        the pool)."""
+        c = self.chunks[key]
+        dev = self.pool.read(c.reprs["hbm"])
+        n = c.tokens[1] - c.tokens[0]
+        out = {f: dev[f][:, :, :n] for f in c.fields}
+        out["kpos"] = dev["kpos"][:, :n]
+        return out
 
     def fetch(self, key: str) -> Optional[dict]:
         """The chunk as device arrays, promoting it to the HBM tier.  An
@@ -349,12 +408,12 @@ class ChunkStore:
         if tier == "hbm":
             self.io_hits += 1
             self.core.touch(key)
-            return c.reprs["hbm"]
+            return self.device_view(key)
         self.fetches += 1
         self.bytes_transferred += self._size(key, tier)
         landed = self.core.promote(key, "hbm")
         if landed == "hbm":
-            return c.reprs["hbm"]
+            return self.device_view(key)
         # HBM tier can't hold it (oversized/cap pressure): ephemeral view
         return self._decode_device(key)
 
@@ -425,6 +484,27 @@ class ChunkStore:
                     layers: Tuple[int, int]):
         self.skipped_transfers += 1
 
+    def missing_fraction(self, rid: str, tokens: Tuple[int, int],
+                         layers: Tuple[int, int]) -> float:
+        """Bytes-weighted fraction of the I/O unit's blocks NOT already
+        HBM-resident — block-granular residency for the engine core's
+        partial-transfer pricing: a unit with some blocks on device only
+        pays the interconnect for the missing ones (partial eviction no
+        longer re-transfers from token 0)."""
+        keys = self.requests.get(rid)
+        if not keys:
+            return 1.0
+        cs = self.chunk_size
+        t0, t1 = tokens
+        tot = miss = 0
+        for ci in range(t0 // cs, min(len(keys), -(-t1 // cs))):
+            c = self.chunks.get(keys[ci])
+            nb = c.raw_nbytes if c is not None else cs
+            tot += nb
+            if self.core.tier_of(keys[ci]) != "hbm":
+                miss += nb
+        return miss / tot if tot else 1.0
+
     # ------------------------------------------------------------------
     def quant_tolerance(self) -> float:
         """Documented bound on the restored-KV error under int8: 0.5·scale
@@ -434,6 +514,13 @@ class ChunkStore:
 
     def audit(self):
         self.core.audit()
+        self.pool.audit()
+        n_hbm = sum(1 for k in self.chunks
+                    if self.core.tier_of(k) == "hbm")
+        # every hbm-resident chunk pins exactly one store-side pool ref;
+        # request block tables may pin more, never fewer
+        assert self.pool.live_blocks() >= n_hbm, \
+            (self.pool.live_blocks(), n_hbm)
         for rid, keys in self.requests.items():
             for key in keys:
                 c = self.chunks.get(key)

@@ -41,10 +41,16 @@ from typing import Callable, Dict, List, Optional, Sequence
 class Tier:
     name: str
     bandwidth: float               # bytes/s toward HBM
-    capacity: float                # bytes
-    used: float = 0.0
+    capacity: int                  # bytes
+    used: int = 0
     # key -> nbytes in THIS tier's encoding; front = eviction candidate
-    lru: "OrderedDict[str, float]" = field(default_factory=OrderedDict)
+    lru: "OrderedDict[str, int]" = field(default_factory=OrderedDict)
+
+    def __post_init__(self):
+        # byte accounting is EXACT integers: repeated float +=/-= drifts
+        # over long continuous-batching runs and capacity checks go soft
+        self.capacity = int(self.capacity)
+        self.used = int(self.used)
 
 
 class PlacementCore:
@@ -60,16 +66,27 @@ class PlacementCore:
         self.drop_fn = drop_fn
         self.victim_fn = victim_fn
         self.placement: Dict[str, str] = {}      # key -> tier name
-        self._sizes: Dict[str, float] = {}       # key -> nominal (raw) nbytes
+        self._sizes: Dict[str, int] = {}         # key -> nominal (raw) nbytes
+        # incremental recency index: key -> monotone stamp, bumped on every
+        # insert/touch.  Within a tier, stamp order == LRU order, so the
+        # benefit-aware victim scan breaks ties in O(1) per candidate
+        # instead of rebuilding an O(n) position map per eviction (which
+        # made demotion cascades under a full store quadratic).
+        self._stamp: Dict[str, int] = {}
+        self._seq = 0
         self.demotions = 0
         self.promotions = 0
         self.drops = 0
 
     # ------------------------------------------------------------------
-    def _size(self, key: str, tier: str) -> float:
+    def _size(self, key: str, tier: str) -> int:
         if self.size_fn is not None:
-            return self.size_fn(key, tier)
+            return int(self.size_fn(key, tier))
         return self._sizes[key]
+
+    def _restamp(self, key: str):
+        self._seq += 1
+        self._stamp[key] = self._seq
 
     def _index(self, tier: str) -> int:
         return self.order.index(tier)
@@ -81,7 +98,7 @@ class PlacementCore:
         hold it (after eviction).  Returns the tier the entry actually
         landed in, or None if it fell off the bottom (dropped, counted)."""
         if nbytes is not None:
-            self._sizes[key] = nbytes
+            self._sizes[key] = int(nbytes)
         src = self._detach(key)
         return self._place(key, self._index(tier), src)
 
@@ -95,11 +112,13 @@ class PlacementCore:
                 t.lru[key] = nb
                 t.used += nb
                 self.placement[key] = t.name
+                self._restamp(key)
                 return t.name
             i += 1
         # fell off the bottom: the entry leaves the store (accounted)
         self.drops += 1
         self._sizes.pop(key, None)
+        self._stamp.pop(key, None)
         if self.drop_fn is not None:
             self.drop_fn(key, src)
         return None
@@ -125,9 +144,10 @@ class PlacementCore:
             return None
         if self.victim_fn is None:
             return next(iter(t.lru))
-        # benefit-aware: least benefit first; LRU position breaks ties
-        pos = {k: i for i, k in enumerate(t.lru)}
-        return min(t.lru, key=lambda k: (self.victim_fn(k), pos[k]))
+        # benefit-aware: least benefit first; the incremental recency stamp
+        # breaks ties in LRU order without rebuilding a position map on
+        # every eviction of a cascade
+        return min(t.lru, key=lambda k: (self.victim_fn(k), self._stamp[k]))
 
     def _detach(self, key: str) -> Optional[str]:
         """Remove ``key`` from its current tier (accounting only); returns
@@ -143,14 +163,28 @@ class PlacementCore:
         tier = self.placement.get(key)
         if tier is not None and key in self.tiers[tier].lru:
             self.tiers[tier].lru.move_to_end(key)
+            self._restamp(key)
 
     def tier_of(self, key: str) -> Optional[str]:
         return self.placement.get(key)
 
     def promote(self, key: str, to: str) -> Optional[str]:
-        """Move ``key`` UP to ``to`` (no-op if already at or above it)."""
+        """Move ``key`` UP to ``to`` (no-op if already at or above it).
+
+        A promotion counts — and resets the entry's recency — only when the
+        entry actually lands STRICTLY above its source tier.  If no tier in
+        [to, src) can hold the entry (each would be skipped for capacity),
+        the whole call is a pure no-op: the entry keeps its LRU position
+        and ``promotions`` stays put.  (``_place`` never fails with side
+        effects: a tier with ``nb <= capacity`` can always be evicted into
+        fitting, so checking capacities up front is exact.)"""
         tier = self.placement.get(key)
         if tier is None or self._index(tier) <= self._index(to):
+            return tier
+        i_src = self._index(tier)
+        if not any(self._size(key, self.order[i])
+                   <= self.tiers[self.order[i]].capacity
+                   for i in range(self._index(to), i_src)):
             return tier
         src = self._detach(key)
         self.promotions += 1
@@ -161,22 +195,25 @@ class PlacementCore:
         tier it occupied."""
         tier = self._detach(key)
         self._sizes.pop(key, None)
+        self._stamp.pop(key, None)
         return tier
 
     # ------------------------------------------------------------------
-    def total_used(self) -> float:
+    def total_used(self) -> int:
         return sum(t.used for t in self.tiers.values())
 
     def audit(self):
         """Invariants every mutation must preserve: per-tier ``used``
-        equals the sum of its entries, no tier exceeds capacity, and the
-        placement map mirrors tier membership exactly."""
+        EXACTLY equals the sum of its entries (integer bytes — no float
+        drift tolerance), no tier exceeds capacity, and the placement map
+        mirrors tier membership exactly."""
         for t in self.tiers.values():
-            assert abs(t.used - sum(t.lru.values())) < 1e-6, \
+            assert t.used == sum(t.lru.values()), \
                 f"{t.name}: used {t.used} != sum {sum(t.lru.values())}"
-            assert t.used <= t.capacity + 1e-6, \
+            assert t.used <= t.capacity, \
                 f"{t.name}: over capacity ({t.used} > {t.capacity})"
             for k in t.lru:
                 assert self.placement.get(k) == t.name, k
+                assert k in self._stamp, k
         for k, tier in self.placement.items():
             assert k in self.tiers[tier].lru, k
