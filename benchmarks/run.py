@@ -22,6 +22,7 @@ MODULES = [
     "benchmarks.fig10_batch",
     "benchmarks.fig11_storage",
     "benchmarks.fork",
+    "benchmarks.restore_datapath",
     "benchmarks.preemption",
     "benchmarks.throughput",
     "benchmarks.roofline",

@@ -173,6 +173,12 @@ class EngineBackend:
                 bandwidth: Optional[float]) -> float:
         raise NotImplementedError
 
+    def io_channel_hint(self, channel: int) -> None:
+        """Engine channel about to dispatch I/O ops.  A real backend routes
+        the ops onto that channel's physical transfer stream (the fused
+        datapath pins one host→device queue per channel); analytic/replay
+        backends ignore it."""
+
     def io_hit_secs(self, op: ScheduledOp, req: EngineRequest) -> float:
         """Duration of a load whose chunks are already HBM-resident (dedup
         hit): no interconnect bytes move.  A real backend still executes
@@ -353,6 +359,12 @@ class RealBackend(EngineBackend):
         # None = executor default; a quantized chunk store needs its
         # documented int8 tolerance on top of the recompute atol
         self.verify_atol = verify_atol
+        # measured mode: the fused datapath blocks per load op and reports
+        # the transfer wall seconds + per-channel bandwidth (io_secs below
+        # charges those); synthetic durations keep it fully asynchronous
+        dp = getattr(executor, "datapath", None)
+        if dp is not None:
+            dp.measure = dur_fn is None
 
     def admit(self, req: EngineRequest) -> None:
         self.executor.begin_restore(req.request_id, plans=req.plans)
@@ -373,9 +385,24 @@ class RealBackend(EngineBackend):
     def compute_secs(self, op: ScheduledOp, req: EngineRequest) -> float:
         return self._run_op(op)
 
+    def io_channel_hint(self, channel: int) -> None:
+        # load ops dispatched next ride this engine channel's physical
+        # transfer stream (one host→device queue per channel)
+        self.executor.io_channel = channel
+
     def io_secs(self, op: ScheduledOp, req: EngineRequest,
                 bandwidth: Optional[float]) -> float:
-        return self._run_op(op)
+        wall = self._run_op(op)
+        if self.dur_fn is None:
+            # measured mode: charge the channel the datapath's measured
+            # transfer seconds for THIS op (staging + dequant-scatter),
+            # not the whole-cache sync wall time, so per-channel bandwidth
+            # feeds back into the engine clock
+            dp = getattr(self.executor, "datapath", None)
+            secs = dp.pop_measured_secs() if dp is not None else None
+            if secs is not None:
+                return max(1e-12, secs)
+        return wall
 
     def prefill_secs(self, op: ScheduledOp, req: EngineRequest) -> float:
         return self._run_op(op)
@@ -400,6 +427,9 @@ class RealBackend(EngineBackend):
         # resident chunks: the load still executes (HBM-local copy into the
         # live cache) but occupies no transfer-channel time on the clock
         self.executor.execute_op(op)
+        dp = getattr(self.executor, "datapath", None)
+        if dp is not None:
+            dp.pop_measured_secs()     # device-local: nothing to charge
         return 0.0
 
     def io_secs_partial(self, op: ScheduledOp, req: EngineRequest,
@@ -744,6 +774,7 @@ class EngineCore:
             io_blocked: set = set()
             for c in range(self.io_channels):
                 gate_slowdown[0] = self.slow.get(c, 1.0)
+                self.backend.io_channel_hint(c)
                 while io_free[c] and c not in failed:
                     op = sched.next_io(skip=io_blocked)
                     if op is None:

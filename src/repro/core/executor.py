@@ -33,7 +33,8 @@ ATTN_FIELDS = ("k", "v", "ckv")
 
 class RestorationExecutor:
     def __init__(self, model: Model, params, store: Optional[BoundaryStore] = None,
-                 *, chunk_size: int = 16, stages: int = 1, chunk_store=None):
+                 *, chunk_size: int = 16, stages: int = 1, chunk_store=None,
+                 datapath=None):
         self.model = model
         self.params = params
         self.store = store or BoundaryStore()
@@ -56,6 +57,19 @@ class RestorationExecutor:
                 raise ValueError("chunk store does not support ring-buffer "
                                  "(windowed) caches; token->slot is modular")
         self.chunk_store = chunk_store
+        # fused restoration datapath (core/datapath.py): load ops consume
+        # the store's PACKED chunk bytes through per-channel transfer
+        # streams and one dequant-scatter launch per op; None restores
+        # through the legacy per-chunk/per-layer/per-field `.at[].set()`
+        # path (kept as the measured baseline and the fallback for ops
+        # whose layer span has no attention slots)
+        self.datapath = datapath
+        self.io_channel = 0          # engine channel of the op in flight
+        # accounting (benchmarks/tests): cache-write + staging dispatches
+        # issued by load ops, and which path each load op took
+        self.load_dispatches = 0
+        self.fused_loads = 0
+        self.legacy_loads = 0
         # live restoration state: rid -> dict(cache=..., act={stage: x}, ...)
         self._live: Dict[str, dict] = {}
         # lifecycle inputs registered before the engine runs:
@@ -259,9 +273,20 @@ class RestorationExecutor:
             acts.pop((op.stage, op.unit - 1), None)
         live["cache"] = cache
 
+    def _attn_slot_span(self, lo: int, hi: int) -> Optional[Tuple[int, int]]:
+        """Contiguous attention-slot range owned by layers [lo, hi) — slot
+        counters grow monotonically with layer index, so any layer span
+        maps to one contiguous slot range (asserted).  None when the span
+        has no attention layers (pure-recurrent stage of a hybrid)."""
+        slots = [s for k, s in (self.model.slots[i] for i in range(lo, hi))
+                 if k == "attention"]
+        if not slots:
+            return None
+        assert slots == list(range(slots[0], slots[0] + len(slots))), slots
+        return slots[0], slots[-1] + 1
+
     # -- load --------------------------------------------------------------
     def _exec_load(self, op: ScheduledOp):
-        cfg = self.model.cfg
         live = self._live[op.request_id]
         req: StoredRequest = live["req"]
         cache, ref = live["cache"], req.kv_reference
@@ -270,35 +295,61 @@ class RestorationExecutor:
         plan = _plan_of(live, op)
         slots = self.model.slots
         # materialized path: the transfer's bytes come out of the chunk
-        # store's tiers (dequantized on promotion); a store miss (chunk
-        # dropped off the bottom tier) falls back to the ground truth
-        chunks = None
+        # store's tiers; a store miss (chunk dropped off the bottom tier)
+        # falls back to the ground truth.  With a datapath, the op's
+        # chunks stay in their stored (possibly int8) encoding across the
+        # wire and ONE fused dequant-scatter writes the whole layer span;
+        # without one, the legacy loop decodes per chunk and issues one
+        # `.at[].set()` per chunk x layer x field.
+        chunks = packed = None
         if self.chunk_store is not None and "kpos" in cache:
-            chunks = self.chunk_store.fetch_range(op.request_id, t0, t1)
-            if chunks is not None:
+            span = self._attn_slot_span(lo, hi)
+            if self.datapath is not None and span is not None:
+                packed = self.chunk_store.fetch_range_packed(
+                    op.request_id, t0, t1)
+            if packed is not None:
+                self.datapath.restore_op(cache, packed,
+                                         store=self.chunk_store,
+                                         slot_span=span,
+                                         channel=self.io_channel)
+                self.fused_loads += 1
+                self.load_dispatches += self.datapath.last_op_dispatches
                 self._map_loaded_blocks(op.request_id, t0, t1)
+            else:
+                chunks = self.chunk_store.fetch_range(op.request_id, t0, t1)
+                if chunks is not None:
+                    self.legacy_loads += 1
+                    self._map_loaded_blocks(op.request_id, t0, t1)
+        kp_all = None
         for i in range(lo, hi):
             kind, slot = slots[i]
             if kind == "attention":
+                if packed is not None:
+                    continue          # fused scatter covered the whole span
                 if chunks is not None:
                     for c0, c1, pay in chunks:
                         for f in ATTN_FIELDS:
                             if f in cache:
                                 cache[f] = cache[f].at[slot, :, c0:c1].set(
                                     pay[f][slot])
+                                self.load_dispatches += 1
                         cache["kpos"] = cache["kpos"].at[slot, c0:c1].set(
                             pay["kpos"][slot])
+                        self.load_dispatches += 1
                     continue
-                kp_ref = ref["kpos"][slot]
+                if kp_all is None:
+                    kp_all = np.asarray(ref["kpos"])
                 # slots whose stored position falls inside [t0, t1)
-                sel = np.nonzero((np.asarray(kp_ref) >= t0) & (np.asarray(kp_ref) < t1))[0]
+                sel = np.nonzero((kp_all[slot] >= t0)
+                                 & (kp_all[slot] < t1))[0]
                 if sel.size:
                     sel = jnp.asarray(sel)
                     for f in ATTN_FIELDS:
                         if f in cache:
-                            upd = cache[f][slot].at[:, sel].set(ref[f][slot][:, sel])
-                            cache[f] = cache[f].at[slot].set(upd)
-                    cache["kpos"] = cache["kpos"].at[slot, sel].set(kp_ref[sel])
+                            cache[f] = cache[f].at[slot, :, sel].set(
+                                jnp.moveaxis(ref[f][slot][:, sel], 1, 0))
+                    cache["kpos"] = cache["kpos"].at[slot, sel].set(
+                        ref["kpos"][slot][sel])
             else:
                 # recurrent/rwkv state. Layer strategy: this layer is restored
                 # wholly by I/O -> apply its end-of-prefix snapshot now (compute

@@ -196,3 +196,18 @@ def _prod(mesh: Mesh, axes) -> int:
 def to_named(mesh: Mesh, tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def io_channel_devices(mesh: Optional[Mesh] = None,
+                       io_channels: Optional[int] = None):
+    """Physical device behind each restoration I/O channel.
+
+    The engine core's ``io_channels`` contention model maps onto real
+    transfer queues by pinning channel ``c`` to device ``devs[c % len]``:
+    on a sharded mesh every physical device gets its own host→device fetch
+    stream (the paper's third parallelism dimension executed for real);
+    single-device hosts degenerate to N queues on one device, which still
+    pipelines host staging against the dequant-scatter kernel."""
+    devs = list(mesh.devices.flat) if mesh is not None else jax.devices()
+    n = io_channels if io_channels is not None else len(devs)
+    return [devs[c % len(devs)] for c in range(max(1, n))]

@@ -1,0 +1,4 @@
+"""Fused restoration dequant-scatter kernel (one launch per load op)."""
+from repro.kernels.kv_restore.ops import kv_restore_scatter
+
+__all__ = ["kv_restore_scatter"]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the fused restoration dequant-scatter.
+
+One restoration load op owns a packed multi-chunk staging buffer: the
+(possibly int8-quantized) KV of ``n_chunks`` consecutive store chunks,
+concatenated along the token axis and padded to a whole number of chunks.
+The scatter writes slots ``[slot_lo, slot_lo + n_slots)`` and tokens
+``[t0, t0 + T)`` of a per-field cache view ``(A, S, C)`` — rows past ``S``
+(the zero-padded tail of the last chunk of a prefix) are dropped, matching
+the Pallas kernel's boundary-block clipping.
+
+Dequantization is per store chunk: ``scales`` carries one f32 row per
+chunk (the per-channel scales of :mod:`repro.kernels.kv_quant`, tiled to
+the flattened channel axis), broadcast over the chunk's ``chunk_size``
+token rows.  The math — f32 multiply, then a single cast to the cache
+dtype — is exactly ``kv_dequantize_ref``, so a fused restore lands the
+same bits as the legacy promote-then-copy path.  With ``scales=None`` the
+scatter is a pure copy: ``quant="none"`` round-trips bit-exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kv_restore_ref(cache, staged, scales=None, *, t0: int, slot_lo: int = 0,
+                   n_slots: int | None = None, chunk_size: int = 0):
+    """cache: (A, S, C); staged: (A, T, C) int8 or cache-dtype; scales:
+    (n_chunks, C) f32 or None (raw copy).  T must be a multiple of
+    ``chunk_size`` when ``scales`` is given.  Returns the updated cache."""
+    a, s, c = cache.shape
+    t = staged.shape[1]
+    ns = a - slot_lo if n_slots is None else n_slots
+    if scales is not None:
+        srep = jnp.repeat(scales.astype(jnp.float32), chunk_size, axis=0)
+        dec = (staged.astype(jnp.float32) * srep[None]).astype(cache.dtype)
+    else:
+        dec = staged.astype(cache.dtype)
+    t_eff = min(t, s - t0)
+    upd = jax.lax.dynamic_slice(
+        dec, (slot_lo, 0, 0), (ns, t_eff, c))
+    return jax.lax.dynamic_update_slice(cache, upd, (slot_lo, t0, 0))

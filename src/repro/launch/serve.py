@@ -192,6 +192,17 @@ def main():
                     help="real mode: materialize the chunk store's bottom "
                          "tier as .npz files under DIR (in-memory blobs "
                          "when omitted)")
+    ap.add_argument("--datapath", default="fused",
+                    choices=["fused", "legacy"],
+                    help="real mode restoration data path: 'fused' moves "
+                         "each load op's chunks as ONE packed (int8-"
+                         "quantized when --kv-quant int8) staging buffer "
+                         "through a per-channel double-buffered transfer "
+                         "stream and scatters with a single fused dequant "
+                         "kernel launch (core/datapath.py + "
+                         "kernels/kv_restore); 'legacy' keeps the "
+                         "per-chunk/per-layer/per-field .at[].set() "
+                         "baseline")
     ap.add_argument("--evict", action="store_true",
                     help="eviction-mode preemption: drop the victim's "
                          "partially-restored cache (instead of parking "
@@ -237,7 +248,7 @@ def main():
                                 preempt=args.preempt, evict=args.evict,
                                 admission=args.admission,
                                 prefetch=args.prefetch,
-                                kvstore=store)
+                                kvstore=store, datapath=args.datapath)
         decode_len = args.decode_len if args.decode_len >= 0 else 8
         # with a preemption policy armed, stagger arrivals and mark every
         # other request urgent so admission pressure actually exercises it;
@@ -274,6 +285,26 @@ def main():
                 "pool_blocks": store.pool.live_blocks(),
                 "cow_copies": store.pool.cow_copies,
                 "cow_bytes": store.pool.bytes_copied}
+        if eng.datapath is not None:
+            dp, ex = eng.datapath, eng.executor
+            out["datapath"] = {
+                "mode": args.datapath,
+                "channels": len(dp.streams),
+                "kernel_launches": dp.kernel_launches,
+                "resident_copies": dp.resident_copies,
+                "staged_puts": sum(s.puts for s in dp.streams),
+                "staged_bytes": sum(s.bytes_staged for s in dp.streams),
+                "fused_loads": ex.fused_loads,
+                "legacy_loads": ex.legacy_loads,
+                "load_dispatches": ex.load_dispatches,
+                # measured host→device bytes/sec per engine channel (None
+                # until a channel carries a measured transfer)
+                "channel_gbps": [round(b / 1e9, 6) if b else None
+                                 for b in dp.bandwidths()]}
+        elif store is not None:
+            out["datapath"] = {"mode": "legacy",
+                               "load_dispatches":
+                                   eng.executor.load_dispatches}
         print(json.dumps(out, indent=1))
         return
 

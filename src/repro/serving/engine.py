@@ -202,7 +202,8 @@ class RealServingEngine:
                  seed: int = 0, io_channels: int = 1, max_batch: int = 0,
                  kvstore: Optional[TieredKVStore] = None,
                  preempt: str = "none", evict: bool = False,
-                 admission: str = "continuous", prefetch: bool = False):
+                 admission: str = "continuous", prefetch: bool = False,
+                 datapath: str = "fused"):
         self.model = model
         self.params = params
         self.system = system
@@ -221,9 +222,21 @@ class RealServingEngine:
         # and the executor's byte source: load ops then move real chunk
         # bytes out of its tiers instead of copying ground truth
         materialized = getattr(kvstore, "materialized", False)
+        # "fused" (default) restores through core/datapath.py: per-channel
+        # double-buffered transfer streams + one dequant-scatter launch per
+        # load op; "legacy" keeps the per-chunk `.at[].set()` baseline.  A
+        # prebuilt RestoreDatapath may be passed directly.
+        dp = None
+        if materialized and datapath not in (None, "legacy"):
+            if datapath == "fused":
+                from repro.core.datapath import RestoreDatapath
+                dp = RestoreDatapath.for_channels(io_channels)
+            else:
+                dp = datapath
+        self.datapath = dp
         self.executor = RestorationExecutor(
             model, params, chunk_size=chunk_size, stages=stages,
-            chunk_store=kvstore if materialized else None)
+            chunk_store=kvstore if materialized else None, datapath=dp)
         self._rng = jax.random.PRNGKey(seed)
 
     def _inputs(self, n: int):

@@ -40,11 +40,20 @@ chunk is simply a future ``store miss`` and restoration falls back to
 recompute/ground-truth.
 
 Quantization is one-way per chunk: the int8 form becomes authoritative on
-first demotion and promotion decodes a bf16 *view*, so repeated
-demote/promote cycles re-encode from a decoded view and may drift by at
-most one LSB per cycle.  ``quant="none"`` round-trips bit-exactly through
-every tier — the restoration served from this store then bit-matches the
-full-prefill reference.
+first demotion, and promotion to HBM keeps that sub-HBM encoding alive as
+a *shadow* — a later demotion to a same-precision tier reuses the shadow
+instead of re-encoding from the decoded bf16 view, so demote/promote
+cycles are drift-free after the first quantization.  ``quant="none"``
+round-trips bit-exactly through every tier — the restoration served from
+this store then bit-matches the full-prefill reference.
+
+The fused restoration datapath (``core/datapath.py``) consumes chunks in
+their *stored* encoding via ``fetch_packed`` / ``fetch_range_packed`` —
+int8 bytes + scales cross the host→device wire and are dequantized on
+device by the ``kv_restore`` kernel — and lands the HBM pool block from
+the already-staged device arrays via ``promote_staged`` (no second
+host→device copy).  The legacy per-chunk ``fetch`` path decodes on the
+host first; both paths share byte/hit/miss accounting exactly.
 """
 from __future__ import annotations
 
@@ -131,6 +140,9 @@ class ChunkStore:
         # aliasing the chunk shares ONE physical copy (CoW on writes)
         self.pool = BlockPool(chunk_size)
         self.chunks: Dict[str, _Chunk] = {}
+        # device payloads staged by the fused datapath, consumed by _move's
+        # hbm branch so promotion reuses the bytes already on device
+        self._staged_dev: Dict[str, dict] = {}
         self.requests: Dict[str, List[str]] = {}   # rid -> chunk key chain
         # accounting (benchmarks/tests read these)
         self.dedup_hits = 0
@@ -169,14 +181,25 @@ class ChunkStore:
             if dst == "hbm":
                 # the hbm repr is a pool BLOCK ID (the store holds one pool
                 # ref; request block tables aliasing the chunk hold more)
-                c.reprs["hbm"] = self.pool.alloc(self._decode_device(key))
+                staged = self._staged_dev.pop(key, None)
+                c.reprs["hbm"] = self.pool.alloc(
+                    staged if staged is not None
+                    else self._decode_device(key))
             elif dst == "host":
                 c.reprs["host"] = self._encode_host(key)
             else:
                 c.reprs["disk"] = self._encode_disk(key)
         for t in (*CHUNK_TIERS, "raw"):
-            if t != dst and t in c.reprs:
-                self._del_repr(key, t)
+            if t == dst or t not in c.reprs:
+                continue
+            if dst == "hbm" and self.quant == "int8" and t in ("host",
+                                                              "disk"):
+                # keep the authoritative int8 encoding as a shadow across
+                # the promote: demoting back to a same-precision tier
+                # reuses it instead of requantizing the decoded bf16 view
+                # (which drifted one LSB per demote/promote cycle)
+                continue
+            self._del_repr(key, t)
 
     def _drop(self, key: str, src: Optional[str]):
         c = self.chunks.pop(key, None)
@@ -434,6 +457,61 @@ class ChunkStore:
             c0, c1 = self.chunks[keys[ci]].tokens
             out.append((c0, c1, pay))
         return out
+
+    def fetch_packed(self, key: str) -> Optional[Tuple[str, dict]]:
+        """The chunk in its *stored* encoding, counting the transfer but
+        not decoding: ``("hbm", device views)`` for a resident chunk (an
+        io hit), else ``("int8"|"raw", host payload)`` — the fused
+        datapath stages those bytes as-is and dequantizes on device, then
+        lands the pool block via :meth:`promote_staged`.  Byte/hit/miss
+        accounting is identical to :meth:`fetch`."""
+        c = self.chunks.get(key)
+        tier = self.core.tier_of(key)
+        if c is None or tier is None:
+            self.store_misses += 1
+            return None
+        if tier == "hbm":
+            self.io_hits += 1
+            self.core.touch(key)
+            return "hbm", self.device_view(key)
+        self.fetches += 1
+        self.bytes_transferred += self._size(key, tier)
+        form = "int8" if self.quant == "int8" else "raw"
+        return form, self._host_payload(key)
+
+    def fetch_range_packed(self, rid: str, t0: int, t1: int
+                           ) -> Optional[List[Tuple[int, int, str, dict,
+                                                    str]]]:
+        """Packed (undecoded) payloads of every chunk overlapping tokens
+        [t0, t1): a list of ``(c0, c1, form, payload, key)``.  None if any
+        chunk is missing (caller falls back to ground truth)."""
+        keys = self.requests.get(rid)
+        if keys is None:
+            return None
+        cs = self.chunk_size
+        out = []
+        for ci in range(t0 // cs, min(len(keys), -(-t1 // cs))):
+            got = self.fetch_packed(keys[ci])
+            if got is None:
+                return None
+            c0, c1 = self.chunks[keys[ci]].tokens
+            out.append((c0, c1, got[0], got[1], keys[ci]))
+        return out
+
+    def promote_staged(self, key: str, dev: dict) -> Optional[str]:
+        """Land a fetched chunk in the HBM tier from the datapath's
+        already-staged device arrays: ``_move``'s pool alloc consumes
+        ``dev`` instead of decoding the host payload a second time, so a
+        fused restore puts each chunk on the wire exactly once.  ``dev``
+        must be the dequantized device payload trimmed to the chunk's real
+        token extent."""
+        if self.core.tier_of(key) == "hbm":
+            return "hbm"
+        self._staged_dev[key] = dev
+        try:
+            return self.core.promote(key, "hbm")
+        finally:
+            self._staged_dev.pop(key, None)
 
     # ------------------------------------------------------------------
     # Engine-core kvstore protocol (keyed by request id)

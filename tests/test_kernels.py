@@ -166,3 +166,96 @@ def test_kv_quant_round_trip_error_bound(dtype):
     err = np.abs(np.asarray(x, np.float32) - np.asarray(y, np.float32))
     bound = np.asarray(s) * (0.5 if dtype == jnp.float32 else 1.0) + 1e-7
     assert (err <= bound).all()
+
+
+# ---------------------------------------------------------------------------
+# kv_restore: fused restoration dequant-scatter (one launch per load op)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("a,s,c,cs,t0,nch", [
+    (4, 32, 128, 8, 8, 2),        # aligned mid-prefix range
+    (4, 30, 128, 8, 16, 2),       # odd tail: t0+T=32 > S=30 (boundary clip)
+    (2, 20, 256, 4, 0, 5),        # whole prefix, many chunks
+    (3, 9, 128, 8, 8, 1),        # single tail chunk, 7 padded rows clipped
+])
+def test_kv_restore_kernel_matches_ref(dtype, a, s, c, cs, t0, nch):
+    from repro.kernels.kv_restore import ops as kr_ops
+    t = nch * cs
+    ks = jax.random.split(jax.random.fold_in(RNG, a * s + c + t0), 4)
+    # two fields with different channel widths in ONE launch (k/v vs ckv)
+    caches = [jax.random.normal(ks[0], (a, s, c), dtype),
+              jax.random.normal(ks[1], (a, s, 2 * c), dtype)]
+    staged = [jax.random.randint(ks[2], (a, t, c), -127, 128, jnp.int8),
+              jax.random.randint(ks[3], (a, t, 2 * c), -127, 128, jnp.int8)]
+    scales = [jnp.abs(jax.random.normal(ks[0], (nch, c))) * 0.05 + 1e-3,
+              jnp.abs(jax.random.normal(ks[1], (nch, 2 * c))) * 0.05 + 1e-3]
+    out_i = kr_ops.kv_restore_scatter(caches, staged, scales, t0=t0,
+                                      chunk_size=cs, backend="interpret")
+    out_r = kr_ops.kv_restore_scatter(caches, staged, scales, t0=t0,
+                                      chunk_size=cs, backend="ref")
+    for oi, orr in zip(out_i, out_r):
+        np.testing.assert_array_equal(np.asarray(oi), np.asarray(orr))
+    # untouched regions preserved bit-exactly despite the aliased in-place
+    # partial-grid write
+    for cache, oi in zip(caches, out_i):
+        np.testing.assert_array_equal(np.asarray(oi)[:, :t0],
+                                      np.asarray(cache)[:, :t0])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kv_restore_raw_copy_bit_exact(dtype):
+    """quant="none" staging buffers carry the cache dtype: the scatter is
+    a pure copy and the restored range equals the payload bit-for-bit."""
+    from repro.kernels.kv_restore import ops as kr_ops
+    a, s, c, cs, t0, nch = 3, 26, 128, 8, 8, 2
+    t = nch * cs
+    ks = jax.random.split(jax.random.fold_in(RNG, 11), 2)
+    cache = jax.random.normal(ks[0], (a, s, c), dtype)
+    staged = jax.random.normal(ks[1], (a, t, c), dtype)
+    for backend in ("interpret", "ref"):
+        out = kr_ops.kv_restore_scatter([cache], [staged], None, t0=t0,
+                                        chunk_size=cs, backend=backend)[0]
+        o = np.asarray(out)
+        t_eff = min(t, s - t0)
+        np.testing.assert_array_equal(o[:, t0:t0 + t_eff],
+                                      np.asarray(staged)[:, :t_eff])
+        np.testing.assert_array_equal(o[:, :t0], np.asarray(cache)[:, :t0])
+
+
+def test_kv_restore_slot_subspan():
+    """A layer span owning only slots [lo, hi) must leave other slots'
+    rows untouched (multi-stage splits restore sub-spans)."""
+    from repro.kernels.kv_restore import ops as kr_ops
+    a, s, c, cs = 4, 16, 64, 8
+    cache = jax.random.normal(jax.random.fold_in(RNG, 3), (a, s, c))
+    staged = jax.random.normal(jax.random.fold_in(RNG, 4), (a, cs, c))
+    out = kr_ops.kv_restore_scatter([cache], [staged], None, t0=8,
+                                    slot_lo=1, n_slots=2, chunk_size=cs,
+                                    backend="ref")[0]
+    o, ca, st = (np.asarray(x) for x in (out, cache, staged))
+    np.testing.assert_array_equal(o[0], ca[0])
+    np.testing.assert_array_equal(o[3], ca[3])
+    np.testing.assert_array_equal(o[1:3, 8:16], st[1:3])
+
+
+def test_kv_restore_dequant_matches_kv_dequantize():
+    """The fused scatter's on-device dequant math is bit-identical to the
+    storage codec's kv_dequantize — fused restoration lands the same bits
+    the legacy decode-then-copy path would."""
+    from repro.kernels.kv_quant import ops as kq_ops
+    from repro.kernels.kv_restore import ops as kr_ops
+    a, s, hk, dh, cs = 2, 16, 2, 64, 8
+    x = jax.random.normal(jax.random.fold_in(RNG, 5), (a, 1, cs, hk, dh))
+    q, scales = kq_ops.kv_quantize(x, backend="ref")
+    dec = kq_ops.kv_dequantize(q, scales, jnp.float32, backend="ref")
+    c = hk * dh
+    cache = jnp.zeros((a, s, c))
+    staged = [jnp.asarray(np.asarray(q).reshape(a, cs, c))]
+    sc = [jnp.tile(scales, hk)[None]]          # (1, C): one chunk
+    for backend in ("interpret", "ref"):
+        out = kr_ops.kv_restore_scatter([cache], staged, sc, t0=0,
+                                        chunk_size=cs, backend=backend)[0]
+        np.testing.assert_array_equal(
+            np.asarray(out)[:, :cs], np.asarray(dec).reshape(a, cs, c))
