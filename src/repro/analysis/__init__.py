@@ -1,0 +1,25 @@
+"""Correctness tooling for the CacheFlow engine (DESIGN.md §14).
+
+Three detectors over the same invariant catalog, at three points in the
+development loop:
+
+  * :mod:`repro.analysis.sanitizer` — runtime: ``EngineCore(sanitize=True)``
+    (or ``CACHEFLOW_SANITIZE=1``) checks every scheduling event against the
+    engine's concurrency invariants and raises a structured
+    :class:`~repro.analysis.sanitizer.SanitizerViolation` at the first
+    drift, instead of letting it surface as a flaky benchmark.
+  * :mod:`repro.analysis.trace_lint` — offline: lints any captured
+    ``ScheduleTrace`` JSON (``python -m repro.analysis.lint_trace x.json``),
+    including artifacts uploaded from failing CI runs.
+  * :mod:`repro.analysis.codelint` — static: AST rules encoding repo
+    conventions (``python -m repro.analysis.codelint``), run in CI's lint
+    job.
+
+Everything here is opt-in and dependency-free: the engine hot path never
+imports this package unless sanitizing is enabled.
+"""
+from repro.analysis.sanitizer import EngineSanitizer, SanitizerViolation
+from repro.analysis.trace_lint import LintFinding, lint_trace
+
+__all__ = ["EngineSanitizer", "SanitizerViolation", "LintFinding",
+           "lint_trace"]

@@ -203,7 +203,9 @@ class RestoreDatapath:
             for f, o in zip(fields, out):
                 cache[f] = o.reshape(cache[f].shape)
             dispatches += 1
-            cache["kpos"] = cache["kpos"].at[s_lo:s_hi, r0:r1].set(
+            # one kpos update per RUN, not per chunk x layer x field —
+            # already amortized by the run split
+            cache["kpos"] = cache["kpos"].at[s_lo:s_hi, r0:r1].set(  # codelint: allow(at-set-loop)
                 kpos_dev[s_lo:s_hi])
             dispatches += 1
 

@@ -54,6 +54,7 @@ from __future__ import annotations
 import heapq
 import itertools
 import math
+import os
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -550,7 +551,7 @@ class EngineCore:
                  kvstore=None, promote_tier: str = "host",
                  preempt: str = "none", evict: bool = False,
                  admission: str = "continuous", prefetch: bool = False,
-                 strict: bool = False):
+                 strict: bool = False, sanitize: Optional[bool] = None):
         if preempt not in self.PREEMPT_POLICIES:
             raise ValueError(f"unknown preempt policy {preempt!r}; "
                              f"known: {self.PREEMPT_POLICIES}")
@@ -577,6 +578,17 @@ class EngineCore:
         self.admission = admission
         self.prefetch = prefetch
         self.strict = strict
+        # opt-in runtime invariant sanitizer (repro.analysis.sanitizer).
+        # None defers to the CACHEFLOW_SANITIZE env var; every hook in the
+        # loop is behind an `if san is not None` guard, so the default-off
+        # path adds zero work (measured: benchmarks/restore_datapath.py).
+        if sanitize is None:
+            sanitize = os.environ.get(
+                "CACHEFLOW_SANITIZE", "0").lower() not in ("", "0", "false")
+        self.sanitize = bool(sanitize)
+        # the sanitizer of the most recent run (its counters are the serve
+        # observable); None when sanitizing is off
+        self.last_sanitizer = None
 
     def _bandwidth(self, rid: str) -> Optional[float]:
         if self.kvstore is None:
@@ -613,6 +625,13 @@ class EngineCore:
             requests = [r for r in requests if r.plans]
 
         now = 0.0
+        san = None
+        if self.sanitize:
+            # lazy import: the analysis package never loads on the default
+            # (sanitize=False) path
+            from repro.analysis.sanitizer import EngineSanitizer
+            san = EngineSanitizer(self)
+        self.last_sanitizer = san
         # the candidate channel's duration multiplier, set by the dispatch
         # loop before each next_io() pass so the benefit gate prices the
         # transfer at the channel it would actually ride (a 10x-degraded
@@ -681,6 +700,8 @@ class EngineCore:
         # background transfer pin the channel would starve the foreground
         # loads it was meant to accelerate.
         prefetch_state: Dict[str, object] = {}
+        if san is not None:
+            san.bind(ops_log=ops_log, busy_comp=busy_comp, busy_io=busy_io)
 
         def stage_unblocked(op_stage: int, rid: str) -> bool:
             if self.stage_parallel:
@@ -720,6 +741,8 @@ class EngineCore:
                 bw = self._bandwidth(rid)
                 dur = self.backend.prefetch_secs(op, r, bw) \
                     * self.slow.get(c, 1.0)
+                if san is not None:
+                    san.on_dispatch(now, f"io{c}", op, dur)
                 io_free[c] = False
                 busy_io[c] += dur
                 log_idx = len(ops_log)
@@ -759,6 +782,8 @@ class EngineCore:
                         restore_start.setdefault(op.request_id, now)
                         dur = self.backend.compute_secs(op, r)
                         desc = f"{op.request_id}:c{op.unit}"
+                    if san is not None:
+                        san.on_dispatch(now, f"comp{s}", op, dur)
                     comp_free[s] = False
                     busy_comp[s] += dur
                     log_idx = len(ops_log)
@@ -805,6 +830,8 @@ class EngineCore:
                         dur = self.backend.io_secs_partial(op, r, bw, frac) \
                             * self.slow.get(c, 1.0)
                     restore_start.setdefault(op.request_id, now)
+                    if san is not None:
+                        san.on_dispatch(now, f"io{c}", op, dur)
                     io_free[c] = False
                     busy_io[c] += dur
                     log_idx = len(ops_log)
@@ -822,6 +849,8 @@ class EngineCore:
             if decode_free and decoding:
                 rids = sorted(decoding, key=lambda rid: sched.arrival_index[rid])
                 dur = self.backend.decode_secs([reqs[rid] for rid in rids])
+                if san is not None:
+                    san.on_decode_dispatch(now, dur, rids)
                 decode_free = False
                 busy_decode += dur
                 decode_steps += 1
@@ -840,11 +869,15 @@ class EngineCore:
                 aborted_ids.add(id(op))
                 io_free[c] = True
                 busy_io[c] -= dur
+                if san is not None:
+                    san.on_abort(now, f"io{c}", op, rolled_back=dur)
                 t0, _, rn, desc = ops_log[log_idx]
                 ops_log[log_idx] = (t0, now, rn, desc + ":aborted")
                 if trace is not None:
                     trace.record_abort(now, f"io{c}", op)
             reqs[r.request_id] = r
+            if san is not None:
+                san.on_admit(now, r)
             active.add(r.request_id)
             sched.add_request(r.plans, priority=r.priority,
                               deadline=r.deadline)
@@ -868,7 +901,10 @@ class EngineCore:
             active.discard(vid)
             suspended[vid] = reqs[vid]
             preemptions[vid] = preemptions.get(vid, 0) + 1
-            for op, resource, dur, log_idx in outstanding.pop(vid, []):
+            recs = outstanding.pop(vid, [])
+            if san is not None:
+                san.on_suspend(now, vid, recs, self.evict)
+            for op, resource, dur, log_idx in recs:
                 # the resource stays physically occupied until the op's
                 # completion event fires; completion then frees it WITHOUT
                 # advancing pointers (the claim is released right here)
@@ -890,6 +926,8 @@ class EngineCore:
         def resume(rid: str):
             """Re-admit a suspended request with all completed units intact."""
             r = suspended.pop(rid)
+            if san is not None:
+                san.on_resume(now, rid)
             active.add(rid)
             sched.resume(rid)
             self.backend.resume(r)
@@ -952,6 +990,8 @@ class EngineCore:
             """Lifecycle complete: free the admission slot (continuous
             batching frees capacity at DECODE completion, not restore)."""
             finish[rid] = now
+            if san is not None:
+                san.on_finish(now, rid)
             active.discard(rid)
             self.backend.request_done(reqs[rid])
             if trace is not None:
@@ -971,6 +1011,8 @@ class EngineCore:
         def on_restored(rid: str):
             r = reqs[rid]
             restore_finish[rid] = now
+            if san is not None:
+                san.on_restore_done(now, rid)
             self.backend.restore_done(r)
             if trace is not None:
                 trace.record_done(now, rid)
@@ -993,6 +1035,8 @@ class EngineCore:
 
         while events:
             now, _, kind, payload = heapq.heappop(events)
+            if san is not None:
+                san.on_event(now, kind)
             if kind == "arrive":
                 r: EngineRequest = payload
                 if self.admission == "gang":
@@ -1014,10 +1058,14 @@ class EngineCore:
                     # op of a preempted request: the kernel's time is already
                     # rolled back and the claim released; just free the stage
                     aborted_ids.discard(id(op))
+                    if san is not None:
+                        san.on_abort(now, f"comp{s}", op)
                     if trace is not None:
                         trace.record_abort(now, f"comp{s}", op)
                 else:
                     unregister(op.request_id, op)
+                    if san is not None:
+                        san.on_complete(now, f"comp{s}", op)
                     restored = sched.complete(op)
                     if trace is not None:
                         trace.record_complete(now, f"comp{s}", op)
@@ -1032,6 +1080,8 @@ class EngineCore:
                 io_free[c] = True
                 if id(op) in aborted_ids:
                     aborted_ids.discard(id(op))
+                    if san is not None:
+                        san.on_abort(now, f"io{c}", op)
                     if trace is not None:
                         trace.record_abort(now, f"io{c}", op)
                 elif c in failed:
@@ -1041,6 +1091,9 @@ class EngineCore:
                     p = sched.plans[(op.request_id, op.stage)]
                     p.plan.release_io()
                     busy_io[c] -= dur
+                    if san is not None:
+                        san.on_abort(now, f"io{c}", op, rolled_back=dur,
+                                     release_claim=True)
                     if rec is not None:
                         t0, t1, rn, desc = ops_log[rec[3]]
                         ops_log[rec[3]] = (t0, t1, rn, desc + ":aborted")
@@ -1048,6 +1101,8 @@ class EngineCore:
                         trace.record_abort(now, f"io{c}", op)
                 else:
                     unregister(op.request_id, op)
+                    if san is not None:
+                        san.on_complete(now, f"io{c}", op)
                     restored = sched.complete(op)
                     if trace is not None:
                         trace.record_complete(now, f"io{c}", op)
@@ -1059,6 +1114,8 @@ class EngineCore:
                     trace.record_fail(now, payload)
             elif kind == "decode_done":
                 decode_free = True
+                if san is not None:
+                    san.on_decode_done(now)
                 for rid in payload:
                     decoding[rid] -= 1
                     # decode-only lifecycles (new_len == 0): the first
@@ -1081,6 +1138,8 @@ class EngineCore:
                     # the channel died mid-prefetch: background work, so
                     # just roll the time back and allow a retry elsewhere
                     busy_io[c] -= dur
+                    if san is not None:
+                        san.on_abort(now, f"io{c}", op, rolled_back=dur)
                     t0, t1, rn, desc = ops_log[log_idx]
                     ops_log[log_idx] = (t0, t1, rn, desc + ":aborted")
                     prefetch_state.pop(rid, None)
@@ -1088,6 +1147,8 @@ class EngineCore:
                         trace.record_abort(now, f"io{c}", op)
                 else:
                     prefetch_state[rid] = "done"
+                    if san is not None:
+                        san.on_complete(now, f"io{c}", op)
                     if self.kvstore is not None:
                         self.kvstore.promote(rid, self.promote_tier)
                     if trace is not None:
@@ -1099,6 +1160,13 @@ class EngineCore:
                 + [r.request_id for r in pending]
             raise RuntimeError(
                 f"engine core stalled before completion: {unfinished}")
+
+        if san is not None:
+            san.on_run_end(active=active, pending=pending,
+                           suspended=suspended)
+            if trace is not None and trace.trace is not None:
+                for ev in trace.trace.events:
+                    san.on_trace_event(ev)
 
         makespan = max(finish.values(), default=0.0) or 1e-12
         result = EngineResult(

@@ -321,7 +321,9 @@ class RestorationExecutor:
                     self.legacy_loads += 1
                     self._map_loaded_blocks(op.request_id, t0, t1)
         kp_all = None
-        for i in range(lo, hi):
+        # legacy per-chunk baseline + recurrent-state snapshot apply: kept
+        # deliberately as the comparison point for the fused datapath
+        for i in range(lo, hi):  # codelint: allow(at-set-loop)
             kind, slot = slots[i]
             if kind == "attention":
                 if packed is not None:
@@ -539,7 +541,9 @@ class RestorationExecutor:
             for i in range(lo, hi):
                 kind, slot = self.model.slots[i]
                 if kind != "attention":
-                    for f, arr in snap.items():
+                    # tiny once-per-layer state fix-up at restore finalize,
+                    # not the bulk KV path
+                    for f, arr in snap.items():  # codelint: allow(at-set-loop)
                         cache[f] = cache[f].at[slot].set(arr[slot])
         live["cache"] = cache
 

@@ -1,16 +1,22 @@
-"""Offline profiling for the adaptive strategy crossover L_Δ (paper Fig. 3).
+"""Offline profiling for the adaptive strategy crossover L_Δ (paper Fig. 3)
+plus the sanitizer's observable counters.
 
-Two modes:
+Two profiling modes:
   * analytic — sweep the cost model's T_token(N) / T_layer(N) curves
     (what production deployments would tabulate per hardware SKU);
   * measured — time the real-JAX executor's token-wise vs layer-wise
     restoration on a small model (validates that the crossover exists and is
     content-agnostic; used by tests/benchmarks on CPU).
-"""
+
+:class:`SanitizerCounters` is the sanitizer's (``repro.analysis.sanitizer``)
+running tally — dispatch/claim/abort/preemption totals and high-water marks
+— surfaced by ``launch/serve.py --sanitize`` alongside the datapath
+bandwidth observable so a serving run's concurrency health is one JSON blob
+away."""
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import asdict, dataclass
 from typing import Dict, List, Optional
 
 import jax
@@ -65,3 +71,28 @@ def profile_measured(executor: RestorationExecutor, make_inputs,
 
 def utilization_report(sim_result) -> Dict[str, float]:
     return {"compute_busy": sim_result.compute_busy, "io_busy": sim_result.io_busy}
+
+
+@dataclass
+class SanitizerCounters:
+    """What the runtime sanitizer saw during one ``EngineCore.run``.
+
+    Pure observability (violations RAISE — a nonzero run of these counters
+    is a healthy run, not a buggy one): totals per event class plus the
+    high-water marks that size capacity — peak admitted batch and peak
+    ``BlockPool`` block refcount (how hot the hottest shared prefix ran)."""
+    events: int = 0            # engine events observed
+    dispatches: int = 0        # ops placed on a resource (incl. decode steps)
+    claims: int = 0            # restoration-unit claims (compute + I/O)
+    completions: int = 0       # non-aborted op completions
+    aborts: int = 0            # aborted transfers/ops (preempt, fail, race)
+    preemptions: int = 0       # restorations suspended under pressure
+    admits: int = 0            # admissions (incl. resumes)
+    finishes: int = 0          # lifecycle completions
+    max_active: int = 0        # admitted-batch high water
+    pool_refcount_hw: int = 0  # BlockPool block refcount high water
+    cow_checks: int = 0        # CoW copies verified parent-bits-unchanged
+    audits: int = 0            # store/pool/placement audits executed
+
+    def as_dict(self) -> Dict[str, int]:
+        return asdict(self)

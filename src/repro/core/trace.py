@@ -102,6 +102,49 @@ from repro.core.scheduler import ScheduledOp
 #:       unchanged.
 TRACE_VERSION = 5
 
+#: The schema version table: every event ``kind`` a trace may legally
+#: contain, mapped to the schema version that introduced it.  This is the
+#: single registry the tooling checks against — ``analysis/trace_lint``
+#: rejects events with unknown kinds (or kinds newer than the trace's own
+#: version), and ``analysis/codelint`` statically verifies that every
+#: ``kind=`` a :class:`TraceRecorder` method emits is registered here.
+#: Adding a recorder method without a registry entry is a lint error by
+#: design: an unregistered kind would silently round-trip through JSON but
+#: mean nothing to replay or to the linter.
+EVENT_KINDS: Dict[str, int] = {
+    "admit": 1,
+    "gate": 1,
+    "dispatch": 1,
+    "complete": 1,
+    "abort": 1,
+    "fail": 1,
+    "done": 1,
+    "decode_step": 2,
+    "finish": 2,
+    "preempt": 3,
+    "resume": 3,
+    "prefetch_gate": 5,
+}
+
+#: Fields required on each event kind (beyond ``kind``/``t``) — the shape
+#: half of schema validity.  ``dispatch`` additionally carries ``duration``;
+#: gates carry their answer.  Optional fields (``bandwidth``,
+#: ``decode_load``, ``batch``) are omitted when absent and not listed.
+EVENT_REQUIRED_FIELDS: Dict[str, tuple] = {
+    "admit": ("request_id",),
+    "gate": ("request_id", "stage", "unit", "allowed"),
+    "dispatch": ("resource", "op", "duration"),
+    "complete": ("resource", "op"),
+    "abort": ("resource", "op"),
+    "fail": ("channel",),
+    "done": ("request_id",),
+    "decode_step": ("requests", "duration"),
+    "finish": ("request_id",),
+    "preempt": ("request_id",),
+    "resume": ("request_id",),
+    "prefetch_gate": ("request_id", "allowed"),
+}
+
 
 class TraceVersionError(ValueError):
     """The trace's schema version is missing or unsupported."""

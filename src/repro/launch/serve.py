@@ -22,11 +22,20 @@ restored cache is verified against full-prefill ground truth under the
 captured interleaving).  On-device replay requires a trace whose geometry
 fits the reduced model — capture it with ``--real --trace-out``; paper-scale
 sim traces replay analytically.
+
+Correctness tooling (see DESIGN.md §14): ``--sanitize`` (or
+``CACHEFLOW_SANITIZE=1``) runs the engine under the runtime invariant
+sanitizer and prints its counters in the report.  Captured traces lint
+offline with
+  PYTHONPATH=src python -m repro.analysis.lint_trace t.json
+and the repo-specific static lint pass runs with
+  PYTHONPATH=src python -m repro.analysis.codelint
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 
 import jax
 
@@ -44,7 +53,9 @@ def _save_trace(rec: TraceRecorder, path: str, arch: str = None):
     if arch is not None:
         rec.trace.meta["arch"] = arch   # replay sanity check (--real)
     rec.trace.save(path)
-    print(f"# schedule trace ({len(rec.trace.events)} events) -> {path}")
+    # stderr: stdout carries the JSON report (`serve ... > report.json`)
+    print(f"# schedule trace ({len(rec.trace.events)} events) -> {path}",
+          file=sys.stderr)
 
 
 def _replay(args) -> None:
@@ -209,6 +220,13 @@ def main():
                          "it) and restart restoration from the KV store "
                          "on re-admission — for when host memory is tight")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run the engine under the runtime sanitizer "
+                         "(repro.analysis.sanitizer): every scheduling "
+                         "event is checked against the engine's "
+                         "concurrency invariants and the report prints "
+                         "the sanitizer counters; equivalent to "
+                         "CACHEFLOW_SANITIZE=1")
     ap.add_argument("--real", action="store_true", help="run a reduced model for real")
     ap.add_argument("--trace-out", metavar="PATH",
                     help="capture the restoration schedule to a JSON trace")
@@ -248,7 +266,8 @@ def main():
                                 preempt=args.preempt, evict=args.evict,
                                 admission=args.admission,
                                 prefetch=args.prefetch,
-                                kvstore=store, datapath=args.datapath)
+                                kvstore=store, datapath=args.datapath,
+                                sanitize=args.sanitize or None)
         decode_len = args.decode_len if args.decode_len >= 0 else 8
         # with a preemption policy armed, stagger arrivals and mark every
         # other request urgent so admission pressure actually exercises it;
@@ -273,6 +292,8 @@ def main():
                "io_busy": round(rep.io_busy, 3),
                "decode_busy": round(rep.decode_busy, 3),
                "overlap_decode_restore": round(rep.overlap_decode_restore, 3)}
+        if rep.sanitizer is not None:
+            out["sanitizer"] = rep.sanitizer
         if store is not None:
             out["storage"] = {
                 "chunks": len(store.chunks), "dedup_hits": store.dedup_hits,
@@ -328,11 +349,12 @@ def main():
                            io_channels=args.io_channels,
                            preempt=args.preempt, evict=args.evict,
                            kv_tier=args.kv_tier, admission=args.admission,
-                           prefetch=args.prefetch)
+                           prefetch=args.prefetch,
+                           sanitize=args.sanitize or None)
     rep = eng.run(reqs, trace=recorder)
     if recorder is not None:
         _save_trace(recorder, args.trace_out, arch=args.arch)
-    print(json.dumps({
+    out = {
         "system": args.system, "workload": args.workload,
         "bandwidth": args.bandwidth, "hardware": args.hardware,
         "stages": args.stages, "preempt": args.preempt,
@@ -342,8 +364,10 @@ def main():
         "compute_busy": round(rep.compute_busy, 3),
         "io_busy": round(rep.io_busy, 3),
         "decode_busy": round(rep.decode_busy, 3),
-        "overlap_decode_restore": round(rep.overlap_decode_restore, 3)},
-        indent=1))
+        "overlap_decode_restore": round(rep.overlap_decode_restore, 3)}
+    if rep.sanitizer is not None:
+        out["sanitizer"] = rep.sanitizer
+    print(json.dumps(out, indent=1))
 
 
 if __name__ == "__main__":

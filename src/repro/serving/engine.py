@@ -58,6 +58,8 @@ class ServingReport:
     arrivals: Dict[str, float] = field(default_factory=dict)   # rid -> engine t
     overlap_decode_restore: float = 0.0   # secs decode and restoration ran
                                           # concurrently (steady-state metric)
+    sanitizer: Optional[dict] = None      # SanitizerCounters.as_dict() when
+                                          # the run sanitized, else None
 
     def __post_init__(self):
         if not self.stats:
@@ -118,7 +120,8 @@ class SimServingEngine:
                  channel_slowdown=None, channel_fail_at=None,
                  preempt: str = "none", evict: bool = False,
                  kv_tier: str = "host", admission: str = "continuous",
-                 prefetch: bool = False, decode_interference: float = 0.0):
+                 prefetch: bool = False, decode_interference: float = 0.0,
+                 sanitize: Optional[bool] = None):
         self.cfg = cfg
         self.system = system
         self.stages = stages
@@ -140,6 +143,7 @@ class SimServingEngine:
         self.kv_tier = kv_tier
         self.admission = admission
         self.prefetch = prefetch
+        self.sanitize = sanitize
 
     def _make_core(self) -> EngineCore:
         kw = sim_kwargs(self.system)
@@ -150,7 +154,7 @@ class SimServingEngine:
             channel_fail_at=self.channel_fail_at,
             kvstore=self.kvstore, preempt=self.preempt, evict=self.evict,
             admission=self.admission, prefetch=self.prefetch,
-            **kw)
+            sanitize=self.sanitize, **kw)
 
     def run(self, requests: List[Request], trace=None) -> ServingReport:
         """Drive every request through its whole lifecycle (restore →
@@ -176,7 +180,9 @@ class SimServingEngine:
                 self.kvstore.put(r.request_id,
                                  r.prefix_len * self.cfg.kv_bytes_per_token(),
                                  tier=self.kv_tier)
-        res = self._make_core().run(engine_reqs, trace=trace)
+        core = self._make_core()
+        res = core.run(engine_reqs, trace=trace)
+        san = core.last_sanitizer
         ttfts, restore_secs, e2e, tpots, total, arrivals, finishes = \
             _fill_lifecycle(requests, res)
         return ServingReport(self.system, ttfts, restore_secs,
@@ -185,6 +191,8 @@ class SimServingEngine:
                              preemptions=dict(res.preemptions),
                              arrivals=arrivals, finishes=finishes,
                              overlap_decode_restore=res.overlap_decode_restore,
+                             sanitizer=(san.counters.as_dict()
+                                        if san is not None else None),
                              stats=lifecycle_stats(
                                  ttfts, e2e, tpots, total, res.makespan,
                                  arrivals=arrivals, finishes=finishes,
@@ -203,7 +211,7 @@ class RealServingEngine:
                  kvstore: Optional[TieredKVStore] = None,
                  preempt: str = "none", evict: bool = False,
                  admission: str = "continuous", prefetch: bool = False,
-                 datapath: str = "fused"):
+                 datapath: str = "fused", sanitize: Optional[bool] = None):
         self.model = model
         self.params = params
         self.system = system
@@ -217,6 +225,7 @@ class RealServingEngine:
         self.evict = evict
         self.admission = admission
         self.prefetch = prefetch
+        self.sanitize = sanitize
         # a MATERIALIZED store (repro.storage.ChunkStore) plugs in as both
         # the engine-core kvstore (residency/bandwidth/dedup-hit protocol)
         # and the executor's byte source: load ops then move real chunk
@@ -341,10 +350,11 @@ class RealServingEngine:
                           max_active=self.max_batch, kvstore=self.kvstore,
                           preempt=self.preempt, evict=self.evict,
                           admission=self.admission, prefetch=self.prefetch,
-                          strict=True)
+                          sanitize=self.sanitize, strict=True)
         t0 = time.perf_counter()
         res = core.run(engine_reqs, trace=trace)
         serve_wall = time.perf_counter() - t0
+        san = core.last_sanitizer
         ttfts, restore_secs, e2e, tpots, total, arrivals, finishes = \
             _fill_lifecycle(requests, res)
         for r in requests:
@@ -357,6 +367,8 @@ class RealServingEngine:
                              preemptions=dict(res.preemptions),
                              arrivals=arrivals, finishes=finishes,
                              overlap_decode_restore=res.overlap_decode_restore,
+                             sanitizer=(san.counters.as_dict()
+                                        if san is not None else None),
                              stats=lifecycle_stats(
                                  ttfts, e2e, tpots, total, res.makespan,
                                  arrivals=arrivals, finishes=finishes,

@@ -135,8 +135,11 @@ class PlacementCore:
             vb = t.lru.pop(victim)
             t.used -= vb
             del self.placement[victim]
-            self.demotions += 1
-            self._place(victim, i + 1, t.name)
+            # count the demotion only if the victim LANDED somewhere below;
+            # a victim that falls off the bottom is a drop (counted in
+            # _place) and must not inflate both counters
+            if self._place(victim, i + 1, t.name) is not None:
+                self.demotions += 1
         return True
 
     def _pick_victim(self, t: Tier) -> Optional[str]:
