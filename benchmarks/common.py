@@ -16,7 +16,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.config import HARDWARE, IO_BANDWIDTHS  # noqa: E402
 from repro.configs import get_config  # noqa: E402
 from repro.serving import SimServingEngine, generate  # noqa: E402
+from repro.serving.metrics import dumps_report  # noqa: E402
 
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 os.makedirs(RESULTS, exist_ok=True)
 
@@ -50,3 +52,19 @@ def sim_ttft(system: str, *, workload="swe_bench", arch=None, hw=None, bw=None,
 
 def row(name: str, seconds: float, derived: str) -> str:
     return f"{name},{seconds * 1e6:.1f},{derived}"
+
+
+def emit_bench(name: str, payload: dict, root: str = REPO_ROOT) -> str:
+    """Write a benchmark result as ``BENCH_<name>.json`` in two places:
+    the repo root (where CI and the driver look for machine-readable
+    results) and ``benchmarks/results/`` (kept with the figure CSVs).
+    Serializes via :func:`dumps_report` so the files are strict JSON —
+    non-finite floats become ``null`` instead of bare ``NaN`` tokens.
+    Returns the repo-root path."""
+    text = dumps_report(payload)
+    out = os.path.join(root, f"BENCH_{name}.json")
+    for path in (out, os.path.join(RESULTS, f"BENCH_{name}.json")):
+        with open(path, "w") as f:
+            f.write(text)
+            f.write("\n")
+    return out

@@ -31,7 +31,7 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks.common import row  # noqa: E402
+from benchmarks.common import emit_bench, row  # noqa: E402
 
 _MODEL = {}
 
@@ -160,6 +160,10 @@ def run(smoke: bool = False):
         assert a["cow_per_branch"] == b["cow_per_branch"], \
             (a["cow_per_branch"], b["cow_per_branch"],
              "CoW bytes grew with prefix length")
+    emit_bench("fork", {
+        "branches": branches,
+        "per_prefix": [dict(prefix_len=pl, **m)
+                       for pl, m in zip(prefixes, per_prefix)]})
     return rows
 
 

@@ -2,17 +2,25 @@
 two-priority workload with a tight ``max_active`` cap, ``preempt="priority"``
 must cut the high-priority mean TTFT vs FCFS-only admission while the total
 makespan regresses < 10% — and preempted requests must lose zero completed
-restoration units (resume, not restart)."""
-import json
+restoration units (resume, not restart).
+
+CLI: ``python benchmarks/preemption.py [--smoke]``.  Emits
+``BENCH_preemption.json`` (repo root + ``benchmarks/results/``).
+"""
+import argparse
 import os
+import sys
 
 import numpy as np
 
-from benchmarks.common import RESULTS, row
-from repro.config import HARDWARE, IO_BANDWIDTHS
-from repro.configs import get_config
-from repro.serving import Request, SimServingEngine
-from repro.serving.workloads import bursty_priority
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import emit_bench, row  # noqa: E402
+from repro.config import HARDWARE, IO_BANDWIDTHS  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.serving import Request, SimServingEngine  # noqa: E402
+from repro.serving.workloads import bursty_priority  # noqa: E402
 
 POLICIES = ("none", "priority", "deadline")
 
@@ -27,7 +35,9 @@ def _run(policy, reqs):
                             deadline=r.deadline) for r in reqs])
 
 
-def run():
+def run(smoke: bool = False):
+    # the sweep is pure simulation and already CI-cheap, so --smoke keeps
+    # the exact workload (and hence the acceptance assertions) intact
     reqs = bursty_priority(36, seed=2, burst_every=1.0, burst_size=3)
     hi = [r.request_id for r in reqs if r.priority > 0]
     rows, dump = [], {}
@@ -49,10 +59,24 @@ def run():
                         f"makespan={end:.3f}s "
                         f"makespan_vs_none={end / base_end:.3f}x "
                         f"preemptions={n_pre}"))
-    with open(os.path.join(RESULTS, "preemption.json"), "w") as f:
-        json.dump(dump, f, indent=1)
+    emit_bench("preemption", dump)
     # acceptance: priority preemption pays off and costs < 10% makespan
     assert dump["priority"]["preemptions"] > 0
     assert dump["priority"]["hi_ttft_mean"] < dump["none"]["hi_ttft_mean"]
     assert dump["priority"]["makespan"] < dump["none"]["makespan"] * 1.10
     return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI alias — the sim sweep is already tiny, so "
+                         "this runs the same workload and assertions")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for line in run(smoke=args.smoke):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -22,13 +22,13 @@ and engine-level TTFT through each path.  Acceptance (asserted):
   * fused restoration is bit-identical to the full-prefill reference for
     ``quant="none"`` and within ``quant_tolerance()`` for int8.
 
-Emits ``benchmarks/results/BENCH_restore.json`` (the perf trajectory
-seed).  CLI: ``python benchmarks/restore_datapath.py [--smoke]``.
+Emits ``BENCH_restore.json`` (repo root + ``benchmarks/results/``, the
+perf trajectory seed).  CLI: ``python benchmarks/restore_datapath.py
+[--smoke]``.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -38,7 +38,7 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks.common import RESULTS, row  # noqa: E402
+from benchmarks.common import emit_bench, row  # noqa: E402
 
 _MODEL = {}
 
@@ -193,8 +193,7 @@ def run(smoke: bool = False):
                     f"speedup={ttft_l / ttft_f:.2f}x"))
     results["ttft_fused_s"] = round(ttft_f, 6)
     results["ttft_legacy_s"] = round(ttft_l, 6)
-    with open(os.path.join(RESULTS, "BENCH_restore.json"), "w") as f:
-        json.dump(results, f, indent=1)
+    emit_bench("restore", results)
     return rows
 
 

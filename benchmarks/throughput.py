@@ -26,7 +26,6 @@ strictly higher req/s at the SLO than gang admission on the same workload,
 with nonzero decode<->restoration overlap at the knee.
 """
 import argparse
-import json
 import os
 import sys
 
@@ -35,7 +34,7 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks.common import DEFAULTS, RESULTS, row, sim_ttft  # noqa: E402
+from benchmarks.common import DEFAULTS, emit_bench, row, sim_ttft  # noqa: E402
 from repro.config import IO_BANDWIDTHS  # noqa: E402
 from repro.serving import TieredKVStore  # noqa: E402
 from repro.serving.metrics import sustained_throughput  # noqa: E402
@@ -112,8 +111,7 @@ def run(smoke: bool = False):
         f"continuous={cont['capacity_rps']:.3f}rps "
         f"gang={gang['capacity_rps']:.3f}rps "
         f"gain={speedup:.2f}x at p99_ttft<={SLO_P99_TTFT:g}s"))
-    with open(os.path.join(RESULTS, "throughput.json"), "w") as f:
-        json.dump({"slo_p99_ttft": SLO_P99_TTFT, **curves}, f, indent=1)
+    emit_bench("throughput", {"slo_p99_ttft": SLO_P99_TTFT, **curves})
     # acceptance: continuous batching sustains strictly more load at the
     # SLO, and the mechanism — restoration overlapping live decode — is
     # actually engaged at the steady-state knee

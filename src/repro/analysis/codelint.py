@@ -2,7 +2,7 @@
 
     python -m repro.analysis.codelint [--root PATH] [--json]
 
-Four rules encoding conventions this repo has paid for breaking:
+Five rules encoding conventions this repo has paid for breaking:
 
   * ``kernel-oracle``   — every ``kernels/<name>/kernel.py`` ships a
     ``ref.py`` NumPy/JAX oracle AND an interpret-mode parity test (a test
@@ -23,6 +23,12 @@ Four rules encoding conventions this repo has paid for breaking:
   * ``trace-kinds``     — every trace event kind emitted or matched in
     ``core/trace.py`` is registered in the ``EVENT_KINDS`` schema version
     table, so the offline linter and the upgrader agree on the schema.
+  * ``metric-catalog``  — every metric name passed as a string literal to a
+    ``.counter()`` / ``.gauge()`` / ``.histogram()`` call anywhere under
+    ``src/repro`` is registered in ``obs/registry.py``'s
+    ``METRIC_CATALOG`` (the registry also enforces this at runtime, but
+    telemetry is opt-in, so an unregistered name would otherwise only
+    explode in the rare telemetry-on run).
 
 Each ``check_*`` function takes explicit paths so the mutation self-tests
 can point them at synthetic files.
@@ -266,6 +272,71 @@ def check_trace_kinds(trace_py: Path) -> List[CodeLintFinding]:
 
 
 # ---------------------------------------------------------------------------
+# metric-catalog
+# ---------------------------------------------------------------------------
+
+#: registry accessor methods whose first positional string argument is a
+#: metric name (the scan keys on the METHOD name, so any registry-shaped
+#: object — MetricsRegistry or a future facade — is covered)
+METRIC_METHODS = {"counter", "gauge", "histogram"}
+
+
+def _catalog_names(registry_py: Path):
+    """Parse the ``METRIC_CATALOG`` literal dict's keys, or None if the
+    assignment is missing/not a literal (mirrors EVENT_KINDS handling)."""
+    tree = ast.parse(registry_py.read_text(), filename=str(registry_py))
+    for node in ast.walk(tree):
+        if isinstance(node, ast.AnnAssign) and \
+                isinstance(node.target, ast.Name) and \
+                node.target.id == "METRIC_CATALOG" and node.value is not None:
+            value = node.value
+        elif isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "METRIC_CATALOG"
+                for t in node.targets):
+            value = node.value
+        else:
+            continue
+        if isinstance(value, ast.Dict):
+            return {k.value for k in value.keys
+                    if isinstance(k, ast.Constant)}
+    return None
+
+
+def check_metric_catalog(registry_py: Path,
+                         paths: Sequence[Path]) -> List[CodeLintFinding]:
+    if not registry_py.exists():
+        return [CodeLintFinding("metric-catalog", str(registry_py), 1,
+                                "metrics registry module not found")]
+    registered = _catalog_names(registry_py)
+    if registered is None:
+        return [CodeLintFinding(
+            "metric-catalog", str(registry_py), 1,
+            "no METRIC_CATALOG literal dict found — the metric catalog "
+            "is gone")]
+    out: List[CodeLintFinding] = []
+    for path in paths:
+        if not path.exists():
+            continue
+        tree = ast.parse(path.read_text(), filename=str(path))
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in METRIC_METHODS
+                    and node.args
+                    and isinstance(node.args[0], ast.Constant)
+                    and isinstance(node.args[0].value, str)):
+                continue
+            name = node.args[0].value
+            if name not in registered:
+                out.append(CodeLintFinding(
+                    "metric-catalog", str(path), node.lineno,
+                    f"metric {name!r} used at a .{node.func.attr}() call "
+                    f"but not registered in METRIC_CATALOG "
+                    f"(obs/registry.py)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # CLI
 # ---------------------------------------------------------------------------
 
@@ -280,6 +351,8 @@ def run_all(root: Path) -> List[CodeLintFinding]:
         sorted((src / "storage").glob("*.py"))
     findings += check_unseeded_rng(rng_paths)
     findings += check_trace_kinds(src / "core" / "trace.py")
+    findings += check_metric_catalog(src / "obs" / "registry.py",
+                                     sorted(src.rglob("*.py")))
     return findings
 
 

@@ -551,7 +551,8 @@ class EngineCore:
                  kvstore=None, promote_tier: str = "host",
                  preempt: str = "none", evict: bool = False,
                  admission: str = "continuous", prefetch: bool = False,
-                 strict: bool = False, sanitize: Optional[bool] = None):
+                 strict: bool = False, sanitize: Optional[bool] = None,
+                 telemetry=None):
         if preempt not in self.PREEMPT_POLICIES:
             raise ValueError(f"unknown preempt policy {preempt!r}; "
                              f"known: {self.PREEMPT_POLICIES}")
@@ -589,6 +590,19 @@ class EngineCore:
         # the sanitizer of the most recent run (its counters are the serve
         # observable); None when sanitizing is off
         self.last_sanitizer = None
+        # opt-in telemetry (repro.obs.telemetry), same convention as the
+        # sanitizer: None defers to CACHEFLOW_TELEMETRY, True builds a fresh
+        # Telemetry per run, or pass a prebuilt Telemetry instance.  Hooks
+        # are pure observers behind `if tel is not None` guards, so the
+        # off path costs nothing and the on path is bit-identical on
+        # EngineResult/ops_log (tests/test_obs.py).
+        if telemetry is None:
+            telemetry = os.environ.get(
+                "CACHEFLOW_TELEMETRY", "0").lower() not in ("", "0", "false")
+        self.telemetry = telemetry
+        # the Telemetry of the most recent run (its snapshot is the serve
+        # observable); None when telemetry is off
+        self.last_telemetry = None
 
     def _bandwidth(self, rid: str) -> Optional[float]:
         if self.kvstore is None:
@@ -632,6 +646,15 @@ class EngineCore:
             from repro.analysis.sanitizer import EngineSanitizer
             san = EngineSanitizer(self)
         self.last_sanitizer = san
+        tel = None
+        if self.telemetry:
+            # lazy import, same as the sanitizer: repro.obs never loads on
+            # the default (telemetry off) path
+            from repro.obs.telemetry import Telemetry
+            tel = self.telemetry if isinstance(self.telemetry, Telemetry) \
+                else Telemetry()
+            tel.begin(self)
+        self.last_telemetry = tel
         # the candidate channel's duration multiplier, set by the dispatch
         # loop before each next_io() pass so the benefit gate prices the
         # transfer at the channel it would actually ride (a 10x-degraded
@@ -649,6 +672,8 @@ class EngineCore:
                                              self._bandwidth(p.request_id),
                                              slowdown=gate_slowdown[0],
                                              decode_load=len(decoding))
+            if tel is not None:
+                tel.on_gate(now, p.request_id, ok)
             if trace is not None:
                 trace.record_gate(now, p.request_id, p.stage, u, ok,
                                   decode_load=len(decoding))
@@ -731,6 +756,8 @@ class EngineCore:
                 else:
                     # store-less replay: the recorded answer stands
                     ok = self.backend.prefetch_gate(r)
+                if tel is not None:
+                    tel.on_prefetch_gate(now, rid, ok)
                 if trace is not None:
                     trace.record_prefetch_gate(now, rid, ok)
                 if not ok:
@@ -743,6 +770,8 @@ class EngineCore:
                     * self.slow.get(c, 1.0)
                 if san is not None:
                     san.on_dispatch(now, f"io{c}", op, dur)
+                if tel is not None:
+                    tel.on_dispatch(now, f"io{c}", op, dur)
                 io_free[c] = False
                 busy_io[c] += dur
                 log_idx = len(ops_log)
@@ -784,6 +813,8 @@ class EngineCore:
                         desc = f"{op.request_id}:c{op.unit}"
                     if san is not None:
                         san.on_dispatch(now, f"comp{s}", op, dur)
+                    if tel is not None:
+                        tel.on_dispatch(now, f"comp{s}", op, dur)
                     comp_free[s] = False
                     busy_comp[s] += dur
                     log_idx = len(ops_log)
@@ -832,6 +863,8 @@ class EngineCore:
                     restore_start.setdefault(op.request_id, now)
                     if san is not None:
                         san.on_dispatch(now, f"io{c}", op, dur)
+                    if tel is not None:
+                        tel.on_dispatch(now, f"io{c}", op, dur)
                     io_free[c] = False
                     busy_io[c] += dur
                     log_idx = len(ops_log)
@@ -851,6 +884,8 @@ class EngineCore:
                 dur = self.backend.decode_secs([reqs[rid] for rid in rids])
                 if san is not None:
                     san.on_decode_dispatch(now, dur, rids)
+                if tel is not None:
+                    tel.on_decode_dispatch(now, dur, rids)
                 decode_free = False
                 busy_decode += dur
                 decode_steps += 1
@@ -871,6 +906,8 @@ class EngineCore:
                 busy_io[c] -= dur
                 if san is not None:
                     san.on_abort(now, f"io{c}", op, rolled_back=dur)
+                if tel is not None:
+                    tel.on_abort(now, f"io{c}", op)
                 t0, _, rn, desc = ops_log[log_idx]
                 ops_log[log_idx] = (t0, now, rn, desc + ":aborted")
                 if trace is not None:
@@ -879,6 +916,9 @@ class EngineCore:
             if san is not None:
                 san.on_admit(now, r)
             active.add(r.request_id)
+            if tel is not None:
+                tel.on_admit(now, r.request_id, queued=len(pending),
+                             active=len(active))
             sched.add_request(r.plans, priority=r.priority,
                               deadline=r.deadline)
             self.backend.admit(r)
@@ -904,6 +944,9 @@ class EngineCore:
             recs = outstanding.pop(vid, [])
             if san is not None:
                 san.on_suspend(now, vid, recs, self.evict)
+            if tel is not None:
+                tel.on_preempt(now, vid, evict=self.evict,
+                               aborted_ops=len(recs))
             for op, resource, dur, log_idx in recs:
                 # the resource stays physically occupied until the op's
                 # completion event fires; completion then frees it WITHOUT
@@ -928,6 +971,8 @@ class EngineCore:
             r = suspended.pop(rid)
             if san is not None:
                 san.on_resume(now, rid)
+            if tel is not None:
+                tel.on_resume(now, rid)
             active.add(rid)
             sched.resume(rid)
             self.backend.resume(r)
@@ -993,6 +1038,9 @@ class EngineCore:
             if san is not None:
                 san.on_finish(now, rid)
             active.discard(rid)
+            if tel is not None:
+                tel.on_finish(now, rid, queued=len(pending),
+                              active=len(active))
             self.backend.request_done(reqs[rid])
             if trace is not None:
                 trace.record_finish(now, rid)
@@ -1013,6 +1061,8 @@ class EngineCore:
             restore_finish[rid] = now
             if san is not None:
                 san.on_restore_done(now, rid)
+            if tel is not None:
+                tel.on_restore_done(now, rid)
             self.backend.restore_done(r)
             if trace is not None:
                 trace.record_done(now, rid)
@@ -1039,6 +1089,9 @@ class EngineCore:
                 san.on_event(now, kind)
             if kind == "arrive":
                 r: EngineRequest = payload
+                if tel is not None:
+                    tel.on_arrive(now, r.request_id, queued=len(pending),
+                                  active=len(active))
                 if self.admission == "gang":
                     # run-to-completion baseline: arrivals only ever join
                     # at batch close, never a live batch
@@ -1072,6 +1125,8 @@ class EngineCore:
                     if op.kind == "prefill" and sched.prefill_done(op.request_id):
                         # last pipeline stage of the suffix done -> first token
                         first_token[op.request_id] = now
+                        if tel is not None:
+                            tel.on_first_token(now, op.request_id)
                         enter_decode(op.request_id)
                     elif restored is not None:
                         on_restored(restored)
@@ -1094,6 +1149,8 @@ class EngineCore:
                     if san is not None:
                         san.on_abort(now, f"io{c}", op, rolled_back=dur,
                                      release_claim=True)
+                    if tel is not None:
+                        tel.on_abort(now, f"io{c}", op)
                     if rec is not None:
                         t0, t1, rn, desc = ops_log[rec[3]]
                         ops_log[rec[3]] = (t0, t1, rn, desc + ":aborted")
@@ -1120,6 +1177,8 @@ class EngineCore:
                     decoding[rid] -= 1
                     # decode-only lifecycles (new_len == 0): the first
                     # generated token IS the first token
+                    if tel is not None and rid not in first_token:
+                        tel.on_first_token(now, rid)
                     first_token.setdefault(rid, now)
                     if decoding[rid] <= 0:
                         del decoding[rid]
@@ -1140,6 +1199,8 @@ class EngineCore:
                     busy_io[c] -= dur
                     if san is not None:
                         san.on_abort(now, f"io{c}", op, rolled_back=dur)
+                    if tel is not None:
+                        tel.on_abort(now, f"io{c}", op)
                     t0, t1, rn, desc = ops_log[log_idx]
                     ops_log[log_idx] = (t0, t1, rn, desc + ":aborted")
                     prefetch_state.pop(rid, None)
@@ -1183,6 +1244,8 @@ class EngineCore:
             preemptions=preemptions,
             overlap_decode_restore=decode_restore_overlap(ops_log),
         )
+        if tel is not None:
+            tel.on_run_end(result)
         if trace is not None:
             trace.finish(result)
         return result

@@ -30,6 +30,15 @@ offline with
   PYTHONPATH=src python -m repro.analysis.lint_trace t.json
 and the repo-specific static lint pass runs with
   PYTHONPATH=src python -m repro.analysis.codelint
+
+Observability (see DESIGN.md §15): ``--telemetry`` (or
+``CACHEFLOW_TELEMETRY=1``) collects the engine-wide metrics registry
+(queue depth, batch sizes, gate outcomes, per-channel GB/s, tier
+occupancy, per-request phase timestamps) into the report;
+``--metrics-out m.json`` writes the snapshot to a file and
+``--timeline-out t.json`` exports a Chrome trace-event timeline loadable
+in https://ui.perfetto.dev.  Any captured trace renders offline with
+  PYTHONPATH=src python -m repro.obs.timeline t.json
 """
 from __future__ import annotations
 
@@ -46,6 +55,7 @@ from repro.core.trace import ScheduleTrace, TraceRecorder, replay_trace
 from repro.models import build_model
 from repro.serving import (ChunkStore, RealServingEngine, Request,
                            SimServingEngine, TieredKVStore, generate)
+from repro.serving.metrics import dumps_report
 from repro.serving.workloads import WORKLOADS
 
 
@@ -56,6 +66,22 @@ def _save_trace(rec: TraceRecorder, path: str, arch: str = None):
     # stderr: stdout carries the JSON report (`serve ... > report.json`)
     print(f"# schedule trace ({len(rec.trace.events)} events) -> {path}",
           file=sys.stderr)
+
+
+def _save_timeline(trace: ScheduleTrace, path: str, telemetry=None):
+    """Export the run's Perfetto timeline from its captured trace."""
+    from repro.obs.timeline import trace_to_chrome
+    doc = trace_to_chrome(trace, telemetry=telemetry)
+    with open(path, "w") as f:
+        f.write(dumps_report(doc))
+    print(f"# perfetto timeline ({len(doc['traceEvents'])} events) -> "
+          f"{path} (open in https://ui.perfetto.dev)", file=sys.stderr)
+
+
+def _save_metrics(telemetry: dict, path: str):
+    with open(path, "w") as f:
+        f.write(dumps_report(telemetry))
+    print(f"# telemetry snapshot -> {path}", file=sys.stderr)
 
 
 def _replay(args) -> None:
@@ -132,7 +158,10 @@ def _replay(args) -> None:
         # propagate the source capture's arch tag so a re-captured trace
         # keeps the --real arch sanity check armed
         _save_trace(recorder, args.trace_out, arch=trace.meta.get("arch"))
-    print(json.dumps({
+    if args.timeline_out:
+        _save_timeline(recorder.trace if recorder is not None else trace,
+                       args.timeline_out)
+    print(dumps_report({
         "mode": mode, "trace": args.replay,
         "requests": len(trace.requests),
         "dispatches": len(trace.dispatches()),
@@ -227,6 +256,27 @@ def main():
                          "concurrency invariants and the report prints "
                          "the sanitizer counters; equivalent to "
                          "CACHEFLOW_SANITIZE=1")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="collect the engine-wide metrics registry "
+                         "(repro.obs): queue depth, admitted/decode batch "
+                         "sizes, benefit-gate outcomes, preempt/abort "
+                         "counts, per-channel busy and measured GB/s, "
+                         "storage-tier occupancy and per-request phase "
+                         "timestamps; the report carries the snapshot "
+                         "under 'telemetry'; equivalent to "
+                         "CACHEFLOW_TELEMETRY=1")
+    ap.add_argument("--metrics-out", metavar="PATH",
+                    help="write the full telemetry snapshot (metrics + "
+                         "gauge time series + per-request phase "
+                         "transitions) to PATH as strict JSON; implies "
+                         "--telemetry")
+    ap.add_argument("--timeline-out", metavar="PATH",
+                    help="export the run's schedule as Chrome trace-event "
+                         "JSON loadable in https://ui.perfetto.dev — one "
+                         "track per engine resource, per-request lifecycle "
+                         "flow arrows, aborted-op markers and counter "
+                         "tracks (queue depth, tier bytes, per-channel "
+                         "bandwidth); works with --replay too")
     ap.add_argument("--real", action="store_true", help="run a reduced model for real")
     ap.add_argument("--trace-out", metavar="PATH",
                     help="capture the restoration schedule to a JSON trace")
@@ -241,11 +291,17 @@ def main():
                          "baseline: no mid-flight admission, so preemption "
                          "policies do not apply (drop --preempt)")
 
+    if args.metrics_out:
+        args.telemetry = True
+
     if args.replay:
         _replay(args)
         return
 
-    recorder = TraceRecorder() if args.trace_out else None
+    # --timeline-out renders from a captured trace, so it implies capture
+    # (recording is observation-only; the schedule is unchanged)
+    recorder = TraceRecorder() if (args.trace_out or args.timeline_out) \
+        else None
 
     if args.real:
         cfg = get_config(args.arch).reduced()
@@ -267,7 +323,8 @@ def main():
                                 admission=args.admission,
                                 prefetch=args.prefetch,
                                 kvstore=store, datapath=args.datapath,
-                                sanitize=args.sanitize or None)
+                                sanitize=args.sanitize or None,
+                                telemetry=args.telemetry or None)
         decode_len = args.decode_len if args.decode_len >= 0 else 8
         # with a preemption policy armed, stagger arrivals and mark every
         # other request urgent so admission pressure actually exercises it;
@@ -282,7 +339,7 @@ def main():
                             decode_len=decode_len)
                     for i in range(args.requests)]
         rep = eng.serve(reqs, trace=recorder)
-        if recorder is not None:
+        if args.trace_out:
             _save_trace(recorder, args.trace_out, arch=args.arch)
         out = {"system": args.system, "mode": "real",
                "admission": args.admission,
@@ -326,7 +383,7 @@ def main():
             out["datapath"] = {"mode": "legacy",
                                "load_dispatches":
                                    eng.executor.load_dispatches}
-        print(json.dumps(out, indent=1))
+        _emit_outputs(out, rep, recorder, args)
         return
 
     cfg = get_config(args.arch)
@@ -350,9 +407,10 @@ def main():
                            preempt=args.preempt, evict=args.evict,
                            kv_tier=args.kv_tier, admission=args.admission,
                            prefetch=args.prefetch,
-                           sanitize=args.sanitize or None)
+                           sanitize=args.sanitize or None,
+                           telemetry=args.telemetry or None)
     rep = eng.run(reqs, trace=recorder)
-    if recorder is not None:
+    if args.trace_out:
         _save_trace(recorder, args.trace_out, arch=args.arch)
     out = {
         "system": args.system, "workload": args.workload,
@@ -367,7 +425,24 @@ def main():
         "overlap_decode_restore": round(rep.overlap_decode_restore, 3)}
     if rep.sanitizer is not None:
         out["sanitizer"] = rep.sanitizer
-    print(json.dumps(out, indent=1))
+    _emit_outputs(out, rep, recorder, args)
+
+
+def _emit_outputs(out: dict, rep, recorder, args):
+    """Shared report/metrics/timeline emission for the sim and real paths.
+    stdout gets the report (with the telemetry counters inlined when
+    collected); the full snapshot and the Perfetto timeline go to their
+    --*-out files."""
+    if rep.telemetry is not None:
+        # counters only on stdout — the gauge series and phase timelines
+        # can be large; --metrics-out carries the full snapshot
+        out["telemetry"] = {"counters": rep.telemetry["metrics"]["counters"]}
+    if args.metrics_out:
+        _save_metrics(rep.telemetry, args.metrics_out)
+    if args.timeline_out:
+        _save_timeline(recorder.trace, args.timeline_out,
+                       telemetry=rep.telemetry)
+    print(dumps_report(out))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,21 @@
+"""CacheFlow observability layer (DESIGN.md §15).
+
+``registry``  — catalog-enforced counters/gauges/histograms
+(:data:`METRIC_CATALOG` is the single source of metric names; codelint
+checks every literal against it).  ``telemetry`` — the opt-in
+:class:`Telemetry` hook ``EngineCore`` drives (``telemetry=`` /
+``CACHEFLOW_TELEMETRY=1`` / ``serve --telemetry``).  ``timeline`` — the
+Perfetto/Chrome trace-event exporter
+(``python -m repro.obs.timeline trace.json``).
+"""
+from repro.obs.registry import (METRIC_CATALOG, Counter, Gauge, Histogram,
+                                MetricsRegistry)
+from repro.obs.telemetry import Telemetry, telemetry_env_enabled
+from repro.obs.timeline import (ops_to_chrome, result_to_chrome,
+                                trace_to_chrome)
+
+__all__ = [
+    "METRIC_CATALOG", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "Telemetry", "telemetry_env_enabled",
+    "ops_to_chrome", "result_to_chrome", "trace_to_chrome",
+]

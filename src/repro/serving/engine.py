@@ -60,6 +60,8 @@ class ServingReport:
                                           # concurrently (steady-state metric)
     sanitizer: Optional[dict] = None      # SanitizerCounters.as_dict() when
                                           # the run sanitized, else None
+    telemetry: Optional[dict] = None      # Telemetry.snapshot() when the
+                                          # run collected metrics, else None
 
     def __post_init__(self):
         if not self.stats:
@@ -121,7 +123,7 @@ class SimServingEngine:
                  preempt: str = "none", evict: bool = False,
                  kv_tier: str = "host", admission: str = "continuous",
                  prefetch: bool = False, decode_interference: float = 0.0,
-                 sanitize: Optional[bool] = None):
+                 sanitize: Optional[bool] = None, telemetry=None):
         self.cfg = cfg
         self.system = system
         self.stages = stages
@@ -144,6 +146,7 @@ class SimServingEngine:
         self.admission = admission
         self.prefetch = prefetch
         self.sanitize = sanitize
+        self.telemetry = telemetry
 
     def _make_core(self) -> EngineCore:
         kw = sim_kwargs(self.system)
@@ -154,7 +157,7 @@ class SimServingEngine:
             channel_fail_at=self.channel_fail_at,
             kvstore=self.kvstore, preempt=self.preempt, evict=self.evict,
             admission=self.admission, prefetch=self.prefetch,
-            sanitize=self.sanitize, **kw)
+            sanitize=self.sanitize, telemetry=self.telemetry, **kw)
 
     def run(self, requests: List[Request], trace=None) -> ServingReport:
         """Drive every request through its whole lifecycle (restore →
@@ -183,6 +186,7 @@ class SimServingEngine:
         core = self._make_core()
         res = core.run(engine_reqs, trace=trace)
         san = core.last_sanitizer
+        tel = core.last_telemetry
         ttfts, restore_secs, e2e, tpots, total, arrivals, finishes = \
             _fill_lifecycle(requests, res)
         return ServingReport(self.system, ttfts, restore_secs,
@@ -193,6 +197,8 @@ class SimServingEngine:
                              overlap_decode_restore=res.overlap_decode_restore,
                              sanitizer=(san.counters.as_dict()
                                         if san is not None else None),
+                             telemetry=(tel.snapshot()
+                                        if tel is not None else None),
                              stats=lifecycle_stats(
                                  ttfts, e2e, tpots, total, res.makespan,
                                  arrivals=arrivals, finishes=finishes,
@@ -211,7 +217,8 @@ class RealServingEngine:
                  kvstore: Optional[TieredKVStore] = None,
                  preempt: str = "none", evict: bool = False,
                  admission: str = "continuous", prefetch: bool = False,
-                 datapath: str = "fused", sanitize: Optional[bool] = None):
+                 datapath: str = "fused", sanitize: Optional[bool] = None,
+                 telemetry=None):
         self.model = model
         self.params = params
         self.system = system
@@ -226,6 +233,7 @@ class RealServingEngine:
         self.admission = admission
         self.prefetch = prefetch
         self.sanitize = sanitize
+        self.telemetry = telemetry
         # a MATERIALIZED store (repro.storage.ChunkStore) plugs in as both
         # the engine-core kvstore (residency/bandwidth/dedup-hit protocol)
         # and the executor's byte source: load ops then move real chunk
@@ -350,11 +358,13 @@ class RealServingEngine:
                           max_active=self.max_batch, kvstore=self.kvstore,
                           preempt=self.preempt, evict=self.evict,
                           admission=self.admission, prefetch=self.prefetch,
-                          sanitize=self.sanitize, strict=True)
+                          sanitize=self.sanitize, telemetry=self.telemetry,
+                          strict=True)
         t0 = time.perf_counter()
         res = core.run(engine_reqs, trace=trace)
         serve_wall = time.perf_counter() - t0
         san = core.last_sanitizer
+        tel = core.last_telemetry
         ttfts, restore_secs, e2e, tpots, total, arrivals, finishes = \
             _fill_lifecycle(requests, res)
         for r in requests:
@@ -369,6 +379,8 @@ class RealServingEngine:
                              overlap_decode_restore=res.overlap_decode_restore,
                              sanitizer=(san.counters.as_dict()
                                         if san is not None else None),
+                             telemetry=(tel.snapshot()
+                                        if tel is not None else None),
                              stats=lifecycle_stats(
                                  ttfts, e2e, tpots, total, res.makespan,
                                  arrivals=arrivals, finishes=finishes,

@@ -1,18 +1,44 @@
 """TTFT / lifecycle / utilization metrics."""
 from __future__ import annotations
 
+import json
+import math
 from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
 
 def percentiles(values: Iterable[float], ps=(50, 90, 99)) -> Dict[str, float]:
+    """Percentile summary; empty inputs yield ``None`` values (NOT NaN —
+    None serializes as standard-JSON ``null``, NaN is the non-standard
+    token default ``json.dumps`` emits and most parsers reject)."""
     arr = np.asarray(sorted(values), np.float64)
     if arr.size == 0:
-        return {f"p{p}": float("nan") for p in ps} | {"mean": float("nan")}
+        return {f"p{p}": None for p in ps} | {"mean": None}
     out = {f"p{p}": float(np.percentile(arr, p)) for p in ps}
     out["mean"] = float(arr.mean())
     return out
+
+
+def sanitize_json(obj):
+    """Recursively replace non-finite floats (NaN/±Inf) with None so the
+    structure serializes as strict JSON.  Every report writer pairs this
+    with ``json.dumps(..., allow_nan=False)`` — the sanitizer makes the
+    payload valid, ``allow_nan`` makes any future regression loud."""
+    if isinstance(obj, float):
+        return obj if math.isfinite(obj) else None
+    if isinstance(obj, dict):
+        return {k: sanitize_json(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [sanitize_json(v) for v in obj]
+    return obj
+
+
+def dumps_report(obj, indent: int = 1) -> str:
+    """Strict-JSON report serialization: the single path every report
+    writer (serve stdout, --metrics-out/--timeline-out, emit_bench) goes
+    through, so no emitted file ever carries a bare ``NaN`` token."""
+    return json.dumps(sanitize_json(obj), indent=indent, allow_nan=False)
 
 
 def cdf(values: Iterable[float], n_points: int = 50) -> List[tuple]:
